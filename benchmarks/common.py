@@ -1,0 +1,169 @@
+"""Shared benchmark machinery: dataset prep, feature recording, and the
+QAT classifier training loop (the paper's recipe: AdamW 1e-3, wd 0.01,
+ReduceLROnPlateau 0.8/3, floor 5e-4 — Section III-F)."""
+
+from __future__ import annotations
+
+import functools
+import os
+import time
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quant
+from repro.core.fex import FExConfig, FExNormStats, fex_frames
+from repro.core.gru import (
+    GRUConfig,
+    gru_classifier_forward,
+    init_gru_classifier,
+)
+from repro.data.gscd import make_dataset
+from repro.training.optimizer import (
+    AdamWConfig,
+    ReduceLROnPlateau,
+    adamw_update,
+    init_opt_state,
+)
+
+QUICK = os.environ.get("BENCH_FULL", "0") != "1"
+
+# quick mode: enough samples for the claims' *ordering* to be stable;
+# BENCH_FULL=1 scales everything up.
+N_TRAIN = 24 if QUICK else 120  # per class
+N_TEST = 10 if QUICK else 40
+EPOCHS = 60 if QUICK else 200
+
+
+def datasets(seed: int = 0):
+    train = make_dataset(N_TRAIN, seed=seed, unknown_split="train")
+    test = make_dataset(N_TEST, seed=seed + 1, unknown_split="test")
+    return train, test
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def _frames_batch(audio, cfg: FExConfig):
+    return fex_frames(audio, cfg)
+
+
+def record_software_frames(audio: np.ndarray, cfg: FExConfig,
+                           batch: int = 64) -> np.ndarray:
+    outs = []
+    for i in range(0, len(audio), batch):
+        outs.append(np.asarray(_frames_batch(jnp.asarray(audio[i:i + batch]), cfg)))
+    return np.concatenate(outs)
+
+
+def frames_to_features(
+    frames_or_raw: np.ndarray,
+    cfg: FExConfig,
+    use_log: bool,
+    use_norm: bool,
+    stats: Optional[FExNormStats] = None,
+    already_raw: bool = False,
+) -> Tuple[np.ndarray, Optional[FExNormStats]]:
+    """Rectified frames (or recorded FV_Raw codes) -> classifier input."""
+    if already_raw:
+        fv_raw = jnp.asarray(frames_or_raw)
+    else:
+        fv_raw = quant.quantize_unsigned(
+            jnp.asarray(frames_or_raw), cfg.quant_bits, cfg.quant_full_scale
+        )
+    x = fv_raw
+    if use_log:
+        x = quant.log_compress_lut(x, cfg.quant_bits, cfg.log_bits)
+    if use_norm:
+        if stats is None:
+            flat = x.reshape(-1, x.shape[-1])
+            stats = FExNormStats(
+                mu=flat.mean(0), sigma=flat.std(0) + 1e-3
+            )
+        x = (x - stats.mu) / stats.sigma
+    else:
+        in_bits = cfg.log_bits if use_log else cfg.quant_bits
+        x = x * 2.0 ** -(in_bits - 5)
+    return np.asarray(quant.fake_quant(x, quant.ACT_Q6_8)), stats
+
+
+def train_classifier(
+    feats: np.ndarray,
+    labels: np.ndarray,
+    seed: int = 0,
+    epochs: int = EPOCHS,
+    batch: int = 64,
+    verbose: bool = False,
+) -> Dict:
+    """QAT training of the 2x48 GRU-FC. Returns dict with params+curve."""
+    gcfg = GRUConfig()
+    params = init_gru_classifier(jax.random.PRNGKey(seed), gcfg)
+    ocfg = AdamWConfig(lr=1e-3, weight_decay=0.01)
+    opt = init_opt_state(params, ocfg)
+    sched = ReduceLROnPlateau(1e-3, 0.8, 3, 5e-4)
+
+    @jax.jit
+    def step(params, opt, fv, y, lr):
+        def loss_fn(p):
+            logits = gru_classifier_forward(p, fv, gcfg)[:, -1, :]
+            logz = jax.nn.logsumexp(logits, -1)
+            gold = jnp.take_along_axis(logits, y[:, None], -1)[:, 0]
+            return jnp.mean(logz - gold)
+
+        loss, g = jax.value_and_grad(loss_fn)(params)
+        params, opt, _ = adamw_update(params, g, opt, ocfg, lr)
+        return params, opt, loss
+
+    n = len(labels)
+    rng = np.random.default_rng(seed)
+    lr = 1e-3
+    history = []
+    for epoch in range(epochs):
+        order = rng.permutation(n)
+        losses = []
+        for i in range(0, n - n % batch, batch):
+            sl = order[i:i + batch]
+            params, opt, loss = step(
+                params, opt, jnp.asarray(feats[sl]),
+                jnp.asarray(labels[sl]), lr,
+            )
+            losses.append(float(loss))
+        mean_loss = float(np.mean(losses))
+        lr = sched.step(mean_loss)
+        history.append(mean_loss)
+        if verbose and epoch % 10 == 0:
+            print(f"    epoch {epoch:3d} loss {mean_loss:.4f} lr {lr:.2e}")
+    return {"params": params, "config": gcfg, "history": history}
+
+
+def evaluate(model: Dict, feats: np.ndarray, labels: np.ndarray,
+             batch: int = 128):
+    gcfg = model["config"]
+
+    @jax.jit
+    def logits_fn(fv):
+        return gru_classifier_forward(model["params"], fv, gcfg)[:, -1, :]
+
+    preds = []
+    for i in range(0, len(labels), batch):
+        preds.append(np.argmax(np.asarray(
+            logits_fn(jnp.asarray(feats[i:i + batch]))), -1))
+    preds = np.concatenate(preds)
+    acc = float((preds == labels).mean())
+    n_cls = int(labels.max()) + 1
+    conf = np.zeros((n_cls, n_cls), np.int32)
+    for t, p in zip(labels, preds):
+        conf[t, p] += 1
+    return acc, conf
+
+
+def timed(name):
+    class _T:
+        def __enter__(self):
+            self.t0 = time.time()
+            return self
+
+        def __exit__(self, *a):
+            print(f"  [{name}: {time.time() - self.t0:.1f}s]")
+
+    return _T()

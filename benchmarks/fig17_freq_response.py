@@ -1,0 +1,59 @@
+"""Fig. 17(a)/(b) reproduction: measured FEx frequency response with and
+without per-channel gain (alpha) calibration.
+
+Drives tones across 100 Hz-10 kHz through the time-domain hardware sim
+(mismatched chip) and reports per-channel gain curves; calibration must
+collapse the inter-channel gain spread (paper: systematic SRO-bias
+mismatch before, flat Mel bank after)."""
+
+import jax
+import numpy as np
+
+from repro.core.calibration import calibrate_chip
+from repro.core.filters import design_filterbank
+from repro.core.tdfex import TDFExConfig, draw_chip, tdfex_raw_counts
+
+
+def run(seed: int = 0):
+    print("== Fig. 17a/b: FEx frequency response +- calibration ==")
+    cfg = TDFExConfig()
+    chip = draw_chip(jax.random.PRNGKey(seed), cfg)
+    beta, alpha = calibrate_chip(cfg, chip)
+
+    fexc = cfg.fex
+    freqs = np.geomspace(100, 10000, 25)
+    amp = 0.25
+    t = np.arange(int(fexc.fs_internal * 0.25)) / fexc.fs_internal
+    tones = np.stack(
+        [amp * np.sin(2 * np.pi * f * t) for f in freqs]
+    ).astype(np.float32)
+    counts = np.asarray(
+        tdfex_raw_counts(tones, cfg, chip, audio_rate=False)
+    )  # (F_tones, frames, C)
+    resp = counts[:, 4:, :].mean(1) - np.asarray(beta)[None, :]  # (F, C)
+    resp = np.maximum(resp, 1e-3)
+
+    f0 = design_filterbank(16, fexc.fs_internal).f0
+    peak_raw = resp.max(axis=0)  # per-channel peak across tones
+    peak_cal = (resp * np.asarray(alpha)[None, :]).max(axis=0)
+
+    spread_raw = 20 * np.log10(peak_raw.max() / peak_raw.min())
+    spread_cal = 20 * np.log10(peak_cal.max() / peak_cal.min())
+    print(f"  channel gain spread before cal: {spread_raw:5.2f} dB")
+    print(f"  channel gain spread after  cal: {spread_cal:5.2f} dB")
+
+    # each channel's best tone should be near its design f0
+    best = freqs[resp.argmax(axis=0)]
+    ratio = best / np.asarray(f0)
+    centers_ok = bool(np.all((ratio > 0.6) & (ratio < 1.7)))
+    print(f"  center frequencies track Mel design: "
+          f"{'PASS' if centers_ok else 'FAIL'} "
+          f"(worst ratio {ratio.max():.2f}/{ratio.min():.2f})")
+    ok = spread_cal < spread_raw * 0.6 and centers_ok
+    print(f"  claim (calibration flattens bank): {'PASS' if ok else 'FAIL'}")
+    return {"spread_raw_db": spread_raw, "spread_cal_db": spread_cal,
+            "ok": ok}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,85 @@
+"""Table I reproduction: FEx dynamic range + Schreier FoM.
+
+DR = 20 log10(largest linear signal / zero-input noise floor), measured
+like the paper: integrated in-band noise with zero input (the chip's
+248 uV_RMS input-referred noise dominates — our sim includes it) vs the
+full-scale channel response.
+
+FoM_{S,DR} = DR + 10 log10(1/(P_norm * 2 * FrameShift)) with P_norm from
+eq. (7). Unit note: the published 93.11 dB for this work back-solves to
+FrameShift entered as 16 (milliseconds as a number, not 0.016 s):
+54.89 + 10 log10(1/(4.71e-6 * 2 * 16)) = 93.1. We reproduce the paper's
+arithmetic with that convention (verified below) — the *relative*
+comparison across Table I rows is unaffected.
+"""
+
+import jax
+import numpy as np
+
+from repro.core.filters import design_filterbank
+from repro.core.tdfex import TDFExConfig, tdfex_raw_counts
+
+
+def _power_norm(p_watt: float, f_l: float, f_h: float, n: int) -> float:
+    """Eq. (7): normalize a parallel FEx's power to a 20 kHz band."""
+    r = (f_l / f_h) ** (1.0 / (n - 1))
+    return p_watt * (1 - r) / (1 - r**n) * (20e3 / f_h)
+
+
+def run(seed: int = 0):
+    print("== Table I: FEx dynamic range + Schreier FoM ==")
+    import dataclasses
+
+    import jax.numpy as jnp
+
+    # Two configs: the ideal behavioral chain (noise = input-referred
+    # white + DeltaSigma quantization only -> DR upper bound), and a
+    # NOISE-CALIBRATED chain whose SRO accumulated phase jitter is set so
+    # the zero-input floor matches the chip's measured 248 uV_RMS
+    # in-band noise (1/f + phase-noise dominated on silicon; the paper's
+    # DR 54.89 dB back-solves to ~30 counts RMS at this gain).
+    cfg_ideal = TDFExConfig()
+    cfg_cal = dataclasses.replace(cfg_ideal, phase_noise_rms=1.4)
+    fexc = cfg_ideal.fex
+    ch = 8  # measure at a mid-bank channel like the paper (ch 8)
+    f0 = float(design_filterbank(16, fexc.fs_internal).f0[ch])
+
+    n_frames = 48
+    t = int(fexc.fs_internal * n_frames * fexc.frame_shift_ms / 1e3)
+    silence = jnp.zeros((1, t), jnp.float32)
+    ts = np.arange(t) / fexc.fs_internal
+    tone = jnp.asarray(
+        (0.9 * np.sin(2 * np.pi * f0 * ts))[None, :], jnp.float32
+    )
+
+    drs = {}
+    for name, cfg in [("ideal", cfg_ideal), ("calibrated", cfg_cal)]:
+        c0 = np.asarray(tdfex_raw_counts(
+            silence, cfg, key=jax.random.PRNGKey(seed), audio_rate=False))
+        noise_counts = max(float(c0[0, 4:, ch].std()), 0.3)
+        c1 = np.asarray(tdfex_raw_counts(tone, cfg, audio_rate=False))
+        sig_counts = float(c1[0, 4:, ch].mean()) - cfg.beta_nominal
+        drs[name] = 20 * np.log10(sig_counts / noise_counts)
+        print(f"  [{name:10s}] noise {noise_counts:6.2f} counts RMS, "
+              f"signal {sig_counts:8.1f} -> DR {drs[name]:5.1f} dB")
+    dr_db = drs["calibrated"]
+    print(f"  dynamic range (calibrated): {dr_db:5.1f} dB "
+          f"(paper: 54.89 dB; ideal chain bound: {drs['ideal']:.1f} dB)")
+
+    # Schreier FoM with the paper's measured power (9.3 uW, 16 ch) and
+    # the paper's unit convention (frame shift as ms-number)
+    p_norm = _power_norm(9.3e-6, 111.0, 10.4e3, 16)
+    fom_term = 10 * np.log10(1.0 / (p_norm * 2 * 16.0))
+    fom = dr_db + fom_term
+    fom_paper = 54.89 + fom_term
+    print(f"  P_norm (eq. 7):         {p_norm * 1e6:5.2f} uW")
+    print(f"  FoM_S,DR (our DR):      {fom:5.1f} dB")
+    print(f"  FoM_S,DR (paper DR):    {fom_paper:5.2f} dB (paper: 93.11)")
+    ok = 45.0 < dr_db < 70.0 and abs(fom_paper - 93.11) < 0.5
+    print(f"  claim (DR in the ~55 dB regime; FoM arithmetic "
+          f"reproduces): {'PASS' if ok else 'FAIL'}")
+    return {"dr_db": float(dr_db), "fom": float(fom), "ok": ok}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,75 @@
+"""LM-side smoke driver: train a reduced assigned architecture with the
+full distributed substrate (sharded train step on a small fake-device
+mesh, AdamW, checkpointing) — the same code path the 512-chip dry-run
+lowers, executed for real at toy scale.
+
+  PYTHONPATH=src python examples/lm_smoke.py [--arch qwen3-4b] [--steps 30]
+"""
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, "src")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-4b")
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--devices", type=int, default=8)
+    args = ap.parse_args()
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={args.devices}"
+    )
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.distributed.sharding import (
+        ShardingRules, make_mesh_context, named, param_specs)
+    from repro.models.registry import get_backbone
+    from repro.training.optimizer import AdamWConfig, init_opt_state
+    from repro.training.train_loop import TrainConfig, build_train_step
+
+    cfg = get_config(args.arch).reduced()
+    backbone = get_backbone(cfg)
+    mesh = jax.make_mesh((2, args.devices // 2), ("data", "model"))
+    rules = ShardingRules(mesh=mesh)
+    mesh_ctx = make_mesh_context(rules)
+    print(f"== {args.arch} (reduced: {cfg.n_layers}L d={cfg.d_model}) on "
+          f"a (2, {args.devices // 2}) mesh ==")
+
+    params = backbone.init_params(jax.random.PRNGKey(0), cfg, mesh_ctx)
+    params = jax.device_put(params, named(param_specs(params, rules), mesh))
+    opt = init_opt_state(params, AdamWConfig())
+    step_fn = build_train_step(
+        cfg, rules, TrainConfig(optimizer=AdamWConfig(lr=3e-3)))
+
+    rng = np.random.default_rng(0)
+    data = rng.integers(0, cfg.vocab, (args.steps, 8, 33))
+    with mesh:
+        jitted = jax.jit(step_fn)
+        for it in range(args.steps):
+            batch = {
+                "tokens": jnp.asarray(data[it, :, :-1], jnp.int32),
+                "labels": jnp.asarray(data[it, :, 1:], jnp.int32),
+            }
+            if cfg.frontend == "embedding":
+                batch = {
+                    "embeddings": jax.random.normal(
+                        jax.random.PRNGKey(it), (8, 32, cfg.d_model),
+                        cfg.activation_dtype),
+                    "labels": batch["labels"],
+                }
+            params, opt, metrics = jitted(params, opt, batch)
+            if it % 5 == 0:
+                print(f"  step {it:3d} loss {float(metrics['loss']):.4f} "
+                      f"gnorm {float(metrics['grad_norm']):.2f}")
+    print("smoke train OK — same train_step the 512-chip dry-run compiles")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Streaming KWS serving: N concurrent audio streams, one batched
+weights-resident GRU step per 16 ms frame — the chip's deployment shape
+(Fig. 4) scaled to a TPU serving binary.
+
+  PYTHONPATH=src python examples/serve_streaming.py [--streams 32]
+"""
+
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quant
+from repro.core.fex import FExConfig, FExNormStats, fex_frames
+from repro.core.pipeline import KWSPipeline, KWSPipelineConfig
+from repro.data.gscd import CLASSES, make_dataset
+from repro.serving.serve_loop import StreamingKWSServer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--streams", type=int, default=32)
+    ap.add_argument("--seconds", type=float, default=1.0)
+    args = ap.parse_args()
+
+    # corpus + features + a quickly trained model (or random for demo)
+    data = make_dataset(6, seed=0)
+    fcfg = FExConfig()
+    frames = fex_frames(jnp.asarray(data["audio"][: args.streams]), fcfg)
+    fv_raw = quant.quantize_unsigned(frames, 12, fcfg.quant_full_scale)
+    fv_log = quant.log_compress_lut(fv_raw, 12, 10)
+    stats = FExNormStats(
+        mu=fv_log.reshape(-1, 16).mean(0),
+        sigma=fv_log.reshape(-1, 16).std(0) + 1e-3,
+    )
+    pipe = KWSPipeline(KWSPipelineConfig(), norm_stats=stats)
+    params = pipe.init_params(jax.random.PRNGKey(0))
+    fv = np.asarray(pipe.features_from_raw(fv_raw))
+
+    srv = StreamingKWSServer(pipe, params, max_streams=args.streams)
+    for sid in range(args.streams):
+        srv.open_stream(sid)
+
+    n_frames = min(fv.shape[1], int(args.seconds / 16e-3))
+    print(f"serving {args.streams} streams x {n_frames} frames "
+          f"(16 ms each)...")
+    t0 = time.time()
+    detections = {}
+    for t in range(n_frames):
+        out = srv.step({sid: fv[sid, t] for sid in range(args.streams)})
+        for sid, r in out.items():
+            detections[sid] = r["top"]
+    wall = time.time() - t0
+    per_frame = wall / n_frames * 1e3
+    rt_streams = args.streams * (16.0 / per_frame)
+    print(f"wall {wall:.2f}s -> {per_frame:.2f} ms per batched frame "
+          f"step; real-time capacity at this batch ~{rt_streams:.0f} "
+          f"streams/host (CPU interpret mode)")
+    top_counts = {}
+    for sid, cls in detections.items():
+        top_counts[CLASSES[cls]] = top_counts.get(CLASSES[cls], 0) + 1
+    print("final per-stream top classes (untrained weights -> arbitrary):",
+          top_counts)
+    print("the IC serves 1 stream at 23 uW; TPU serving amortizes one "
+          "weights-resident GRU across thousands of streams")
+
+
+if __name__ == "__main__":
+    main()

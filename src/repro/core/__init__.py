@@ -1,0 +1,29 @@
+"""Core library: the paper's contribution (time-domain FEx + GRU-FC KWS)."""
+
+from repro.core.fex import FExConfig, FExNormStats, fex_forward, fex_frames
+from repro.core.filters import (
+    BiquadCoeffs,
+    design_filterbank,
+    mel_center_frequencies,
+)
+from repro.core.gru import GRUConfig, gru_classifier_forward, init_gru_classifier
+from repro.core.pipeline import KWSPipeline, KWSPipelineConfig
+from repro.core.tdfex import TDFExConfig, TDFExState, tdfex_forward
+
+__all__ = [
+    "FExConfig",
+    "FExNormStats",
+    "fex_forward",
+    "fex_frames",
+    "BiquadCoeffs",
+    "design_filterbank",
+    "mel_center_frequencies",
+    "GRUConfig",
+    "gru_classifier_forward",
+    "init_gru_classifier",
+    "KWSPipeline",
+    "KWSPipelineConfig",
+    "TDFExConfig",
+    "TDFExState",
+    "tdfex_forward",
+]

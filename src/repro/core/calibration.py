@@ -1,0 +1,114 @@
+"""Per-chip calibration, mirroring the measurement flow of Section III-F.
+
+The chip requires:
+  beta  — per-channel offset = free-running SRO counts/frame, measured with
+          a zero input (Fig. 13's programmable offset subtractor);
+  alpha — per-channel gain correction, measured by applying a reference
+          sine at each channel's center frequency and equalizing the
+          response (Fig. 17a -> 17b);
+  mu/sigma — mean/std of FV_Log over the *training set*, used by the input
+          normalizer (Section III-F applies the same mu/sigma at test time).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quant
+from repro.core.fex import FExNormStats
+from repro.core.filters import design_filterbank
+from repro.core.tdfex import (
+    TDFExConfig,
+    TDFExState,
+    tdfex_raw_counts,
+)
+
+__all__ = [
+    "measure_beta",
+    "measure_alpha",
+    "calibrate_chip",
+    "fit_norm_stats_from_counts",
+]
+
+
+def measure_beta(
+    cfg: TDFExConfig,
+    chip: Optional[TDFExState] = None,
+    n_frames: int = 16,
+    key: Optional[jax.Array] = None,
+) -> jnp.ndarray:
+    """Zero-input measurement of the free-running offset (counts/frame)."""
+    t = int(cfg.fex.fs_audio * n_frames * cfg.fex.frame_shift_ms / 1000.0)
+    silence = jnp.zeros((1, t), jnp.float32)
+    counts = tdfex_raw_counts(silence, cfg, chip, key)  # (1, F, C)
+    # Drop the first frames (filter settling) and average.
+    return counts[0, 2:, :].mean(axis=0)
+
+
+def measure_alpha(
+    cfg: TDFExConfig,
+    beta: jnp.ndarray,
+    chip: Optional[TDFExState] = None,
+    amplitude: float = 0.25,
+    n_frames: int = 24,
+    key: Optional[jax.Array] = None,
+) -> jnp.ndarray:
+    """Reference-tone gain equalization.
+
+    For each channel, drive a sine at that channel's design center
+    frequency and set alpha so all channels report the same signal counts.
+    alpha is normalized to mean 1 across channels (pure equalization, no
+    overall gain change), as on the chip where alpha is a programmable
+    per-channel multiplier.
+    """
+    fexc = cfg.fex
+    f0 = np.asarray(
+        design_filterbank(
+            fexc.num_channels, fexc.fs_internal, fexc.f_lo, fexc.f_hi, fexc.q
+        ).f0
+    )
+    # Analog tones at the *internal* rate (the function generator of
+    # Fig. 16 is not band-limited by the dataset's 16 kHz sampling).
+    t = int(fexc.fs_internal * n_frames * fexc.frame_shift_ms / 1000.0)
+    ts = np.arange(t) / fexc.fs_internal
+    tones = jnp.asarray(
+        amplitude * np.sin(2 * np.pi * f0[:, None] * ts[None, :]),
+        jnp.float32,
+    )  # (C, T) — one tone per channel
+    counts = tdfex_raw_counts(tones, cfg, chip, key, audio_rate=False)
+    # Response of channel c to its own tone, settling frames dropped:
+    settled = counts[:, 4:, :].mean(axis=1)  # (C, C)
+    own = jnp.diagonal(settled) - beta  # (C,)
+    own = jnp.maximum(own, 1e-6)
+    alpha = own.mean() / own
+    return alpha / alpha.mean()
+
+
+def calibrate_chip(
+    cfg: TDFExConfig,
+    chip: Optional[TDFExState] = None,
+    key: Optional[jax.Array] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full per-chip calibration -> (beta, alpha)."""
+    if key is not None:
+        kb, ka = jax.random.split(key)
+    else:
+        kb = ka = None
+    beta = measure_beta(cfg, chip, key=kb)
+    alpha = measure_alpha(cfg, beta, chip, key=ka)
+    return beta, alpha
+
+
+def fit_norm_stats_from_counts(
+    fv_raw: jnp.ndarray, cfg: TDFExConfig, eps: float = 1e-3
+) -> FExNormStats:
+    """mu/sigma of FV_Log over recorded training-set features (B, F, C)."""
+    fv_log = quant.log_compress_lut(
+        fv_raw, cfg.fex.quant_bits, cfg.fex.log_bits
+    )
+    flat = fv_log.reshape(-1, fv_log.shape[-1])
+    return FExNormStats(mu=flat.mean(0), sigma=flat.std(0) + eps)

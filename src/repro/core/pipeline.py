@@ -1,0 +1,153 @@
+"""End-to-end KWS pipeline assembly (Fig. 3): FEx -> classifier.
+
+Two feature paths share one classifier:
+  * "software"  — the Section II model (`repro.core.fex`), differentiable,
+                  used for QAT training and the Fig. 2 ablation;
+  * "hardware"  — the Section III time-domain simulation
+                  (`repro.core.tdfex`) with mismatch + calibration, used to
+                  reproduce the measured-vs-software accuracy gap.
+
+The classifier is always trained on features *recorded from the chosen
+path* (the paper records FV_Raw from the chip for its training set —
+Section III-F); `record_features` is that recording step.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quant
+from repro.core.fex import (
+    FExConfig,
+    FExNormStats,
+    fex_forward,
+    fex_frames,
+)
+from repro.core.gru import (
+    GRUConfig,
+    gru_classifier_forward,
+    gru_classifier_step,
+    init_gru_classifier,
+    init_states,
+)
+from repro.core.tdfex import TDFExConfig, TDFExState, tdfex_raw_counts, counts_to_fv_raw
+
+__all__ = ["KWSPipelineConfig", "KWSPipeline"]
+
+
+@dataclasses.dataclass(frozen=True)
+class KWSPipelineConfig:
+    fex: FExConfig = dataclasses.field(default_factory=FExConfig)
+    gru: GRUConfig = dataclasses.field(default_factory=GRUConfig)
+    use_log: bool = True
+    use_norm: bool = True
+
+
+class KWSPipeline:
+    """Stateless-functional pipeline with convenience wrappers."""
+
+    def __init__(
+        self,
+        config: KWSPipelineConfig,
+        norm_stats: Optional[FExNormStats] = None,
+    ):
+        self.config = config
+        self.norm_stats = norm_stats
+
+    # ---------- feature extraction ----------
+
+    @functools.partial(jax.jit, static_argnums=(0,))
+    def features_software(self, audio: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """audio (B, T) -> (fv_norm (B, F, C), fv_raw codes)."""
+        return fex_forward(
+            audio,
+            self.config.fex,
+            norm_stats=self.norm_stats,
+            use_log=self.config.use_log,
+            use_norm=self.config.use_norm,
+        )
+
+    def features_from_raw(self, fv_raw: jnp.ndarray) -> jnp.ndarray:
+        """Post-processing only: recorded FV_Raw codes -> FV_Norm.
+
+        This is what the chip's digital back-end does after the decimation
+        filter, and what training consumes (features recorded once).
+        """
+        x = fv_raw
+        if self.config.use_log:
+            x = quant.log_compress_lut(
+                x, self.config.fex.quant_bits, self.config.fex.log_bits
+            )
+        if self.config.use_norm:
+            if self.norm_stats is None:
+                raise ValueError("use_norm requires fitted norm_stats")
+            x = (x - self.norm_stats.mu) / self.norm_stats.sigma
+        else:
+            in_bits = (
+                self.config.fex.log_bits
+                if self.config.use_log
+                else self.config.fex.quant_bits
+            )
+            x = x * 2.0 ** -(in_bits - 5)
+        return quant.fake_quant(x, quant.ACT_Q6_8)
+
+    # ---------- classifier ----------
+
+    def init_params(self, key: jax.Array) -> Dict[str, Any]:
+        return init_gru_classifier(key, self.config.gru)
+
+    @functools.partial(jax.jit, static_argnums=(0,))
+    def logits(self, params, fv_norm: jnp.ndarray) -> jnp.ndarray:
+        """(B, F, C) -> final-frame logits (B, K)."""
+        all_logits = gru_classifier_forward(params, fv_norm, self.config.gru)
+        return all_logits[:, -1, :]
+
+    @functools.partial(jax.jit, static_argnums=(0,))
+    def logits_all_frames(self, params, fv_norm: jnp.ndarray) -> jnp.ndarray:
+        return gru_classifier_forward(params, fv_norm, self.config.gru)
+
+    def predict(self, params, audio: jnp.ndarray) -> jnp.ndarray:
+        fv_norm, _ = self.features_software(audio)
+        return jnp.argmax(self.logits(params, fv_norm), axis=-1)
+
+    # ---------- streaming serving ----------
+
+    def streaming_init(self, batch: int):
+        return init_states(self.config.gru, batch)
+
+    @functools.partial(jax.jit, static_argnums=(0,))
+    def streaming_step(self, params, states, fv_t: jnp.ndarray):
+        """One 16 ms frame for a batch of streams -> (states, logits)."""
+        return gru_classifier_step(params, states, fv_t, self.config.gru)
+
+
+def record_features_hardware(
+    audio: np.ndarray,
+    tdcfg: TDFExConfig,
+    chip: Optional[TDFExState],
+    beta: jnp.ndarray,
+    alpha: jnp.ndarray,
+    key: Optional[jax.Array] = None,
+    batch_size: int = 64,
+) -> np.ndarray:
+    """Record FV_Raw codes from the hardware sim in batches (Section III-F)."""
+    outs = []
+    fn = jax.jit(
+        lambda a, k: counts_to_fv_raw(
+            tdfex_raw_counts(a, tdcfg, chip, k), tdcfg, beta, alpha
+        )
+    )
+    n = audio.shape[0]
+    for i in range(0, n, batch_size):
+        chunk = jnp.asarray(audio[i : i + batch_size])
+        k = None
+        if key is not None:
+            key, k = jax.random.split(key)
+        outs.append(np.asarray(fn(chunk, k)))
+    return np.concatenate(outs, axis=0)

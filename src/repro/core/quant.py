@@ -1,0 +1,144 @@
+"""Fixed-point / quantization substrate matching the paper's datapath.
+
+The IC uses (Section II / III-E):
+  * 12-bit unsigned quantizer on the decimated FEx output (FV_Raw),
+  * 10-bit logarithmic LUT output (FV_Log),
+  * 14-bit signed activations in Q6.8 (6 integer + 8 fractional bits)
+    for FV_Norm and all GRU activations,
+  * 8-bit signed weights,
+  * 24-bit accumulators in the 8 HPEs.
+
+Training uses quantization-aware training (QAT) with straight-through
+estimators; inference can run a bit-exact integer path (see intgemm
+kernel) whose results the QAT fake-quant path matches by construction.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "QuantSpec",
+    "ACT_Q6_8",
+    "WEIGHT_INT8",
+    "ACC_INT24",
+    "ste_round",
+    "fake_quant",
+    "quantize_int",
+    "dequantize_int",
+    "quantize_unsigned",
+    "log_compress_lut",
+    "make_log_lut",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    """A fixed-point format: `bits` total, `frac_bits` fractional, signed."""
+
+    bits: int
+    frac_bits: int
+    signed: bool = True
+
+    @property
+    def scale(self) -> float:
+        """LSB weight: value = code * 2**-frac_bits."""
+        return 2.0 ** (-self.frac_bits)
+
+    @property
+    def qmin(self) -> int:
+        return -(2 ** (self.bits - 1)) if self.signed else 0
+
+    @property
+    def qmax(self) -> int:
+        return 2 ** (self.bits - 1) - 1 if self.signed else 2**self.bits - 1
+
+    @property
+    def max_value(self) -> float:
+        return self.qmax * self.scale
+
+    @property
+    def min_value(self) -> float:
+        return self.qmin * self.scale
+
+
+# The paper's formats.
+ACT_Q6_8 = QuantSpec(bits=14, frac_bits=8, signed=True)  # activations / FV_Norm
+WEIGHT_INT8 = QuantSpec(bits=8, frac_bits=7, signed=True)  # weights in [-1, 1)
+ACC_INT24 = QuantSpec(bits=24, frac_bits=16, signed=True)  # HPE accumulator
+FV_RAW_U12 = QuantSpec(bits=12, frac_bits=0, signed=False)  # quantizer output
+FV_LOG_U10 = QuantSpec(bits=10, frac_bits=0, signed=False)  # log LUT output
+
+
+@jax.custom_jvp
+def ste_round(x: jnp.ndarray) -> jnp.ndarray:
+    """round-to-nearest-even with a straight-through gradient."""
+    return jnp.round(x)
+
+
+@ste_round.defjvp
+def _ste_round_jvp(primals, tangents):
+    (x,), (t,) = primals, tangents
+    return jnp.round(x), t
+
+
+def fake_quant(x: jnp.ndarray, spec: QuantSpec) -> jnp.ndarray:
+    """Quantize-dequantize to `spec` on the float path (QAT forward).
+
+    Saturates at the format bounds (the HPE accumulator and activation
+    registers saturate rather than wrap) and uses STE for gradients.
+    """
+    inv = 2.0**spec.frac_bits
+    q = ste_round(x * inv)
+    q = jnp.clip(q, spec.qmin, spec.qmax)
+    return q * spec.scale
+
+
+def quantize_int(x: jnp.ndarray, spec: QuantSpec, dtype=jnp.int32) -> jnp.ndarray:
+    """Float -> integer codes (saturating). Bit-exact integer path entry."""
+    q = jnp.round(x * 2.0**spec.frac_bits)
+    return jnp.clip(q, spec.qmin, spec.qmax).astype(dtype)
+
+
+def dequantize_int(codes: jnp.ndarray, spec: QuantSpec) -> jnp.ndarray:
+    return codes.astype(jnp.float32) * spec.scale
+
+
+def quantize_unsigned(x: jnp.ndarray, bits: int, x_max: float) -> jnp.ndarray:
+    """The FEx 12-bit unsigned quantizer: [0, x_max] -> integer codes.
+
+    Mirrors the DeltaSigma-TDC + decimation output register width. Values
+    are clipped (the TDC count register saturates).
+    """
+    levels = 2**bits - 1
+    q = ste_round(jnp.clip(x, 0.0, x_max) / x_max * levels)
+    return q  # float codes in [0, levels]; STE-differentiable
+
+
+def make_log_lut(in_bits: int = 12, out_bits: int = 10) -> jnp.ndarray:
+    """The 12-bit -> 10-bit logarithmic compression LUT (Section II).
+
+    out = round((2^out_bits - 1) * log2(1 + v) / log2(2^in_bits)) — a
+    monotone logarithmic companding curve covering the full input range,
+    exactly representable as a 4096-entry ROM on the IC.
+    """
+    v = jnp.arange(2**in_bits, dtype=jnp.float32)
+    out = jnp.round(
+        (2.0**out_bits - 1.0) * jnp.log2(1.0 + v) / (in_bits * 1.0)
+    )
+    return out.astype(jnp.float32)
+
+
+def log_compress_lut(codes: jnp.ndarray, in_bits: int = 12, out_bits: int = 10):
+    """Differentiable (STE) logarithmic compression of integer codes.
+
+    On hardware this is a ROM lookup; here we evaluate the closed form and
+    round with STE so QAT can backprop through the FEx chain.
+    """
+    x = jnp.clip(codes, 0.0, 2.0**in_bits - 1.0)
+    out = (2.0**out_bits - 1.0) * jnp.log2(1.0 + x) / (in_bits * 1.0)
+    return ste_round(out)

@@ -1,0 +1,271 @@
+"""Behavioral simulation of the time-domain analog FEx (paper Section III).
+
+Signal chain (per Fig. 3):
+
+  VTC      voltage -> multi-phase PWM duty; FLL-linearized, single-ended.
+           Modeled as a linear pass-through + optional HD2/HD3 distortion
+           (-70 dB per Fig. 7) + input-referred noise (248 uV_RMS, Fig. 17c).
+  Rec-BPF  SRO Tow-Thomas biquad, eq. (5): a 2nd-order band-pass in the
+           phase domain, with inherent PFD full-wave rectification.
+           Modeled as the bilinear-discretized biquad + |.|, with
+           per-channel bias mismatch (the shared-V_VAR systematic error of
+           Fig. 17a) scaling both center frequency and gain.
+  SRO PFM + DeltaSigma TDC
+           SRO frequency f = (f_free + k_sro * u) * (1 + mismatch);
+           phase integrates f; 15-phase counters sample floor(15*phi) at
+           f_over; XOR differentiators emit first differences (<=1 LSB,
+           noise-shaped); a 1st-order CIC decimates by R. Telescoping makes
+           the CIC output exactly floor-quantized phase increments per
+           frame — this is what gives the 20 dB/dec shaped spectrum of
+           Fig. 17c.
+  post     beta offset subtract (free-running counts), alpha per-channel
+           gain calibration, log LUT, (x-mu)/sigma normalizer — shared with
+           the software model in `repro.core.fex` / `repro.core.quant`.
+
+Rates: the chip runs the TDC at 62.5 kHz and decimates by 2^10 (61 Hz,
+16.384 ms frames). We simulate the TDC at 64 kHz (integer 2x of the 32 kHz
+audio-internal rate) with R=1024 so frames are exactly 16 ms — the same
+frame shift as the software model; this changes in-band noise by <0.2 dB
+and is noted in DESIGN.md.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fex import FExConfig, biquad_filterbank, oversample2x
+from repro.core.filters import design_filterbank
+
+__all__ = [
+    "TDFExConfig",
+    "TDFExState",
+    "vtc",
+    "rec_bpf",
+    "sro_tdc",
+    "tdfex_raw_counts",
+    "tdfex_forward",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class TDFExConfig:
+    fex: FExConfig = dataclasses.field(default_factory=FExConfig)
+    # --- VTC (Section III-A) ---
+    vtc_hd2_db: float = -70.0  # 2nd-harmonic distortion (post-layout, Fig. 7)
+    vtc_hd3_db: float = -70.0
+    input_noise_rms: float = 248e-6 / 0.125  # 248 uV_RMS input-referred at
+    # ~250 mVpp (=0.125 amplitude) full scale -> normalized units
+    # --- SRO PFM encoder / TDC (Sections III-B/D) ---
+    tdc_oversample: int = 2  # TDC rate = 2 x 32 kHz = 64 kHz
+    decimation: int = 1024  # R; 64 kHz / 1024 -> 62.5 Hz (16 ms frames)
+    n_phases: int = 15  # ring oscillator taps
+    f_free_hz: float = 4000.0  # SRO free-running frequency (offset beta)
+    k_sro_hz: float = 120000.0  # Hz per unit rectified input (gain)
+    # --- mismatch (Fig. 17a) ---
+    gain_mismatch_sigma: float = 0.15  # shared-bias systematic + random
+    cf_mismatch_sigma: float = 0.03  # center-frequency spread
+    phase_noise_rms: float = 0.0  # optional per-step phase jitter (cycles)
+
+    @property
+    def f_tdc(self) -> float:
+        return self.fex.fs_internal * self.tdc_oversample
+
+    @property
+    def beta_nominal(self) -> float:
+        """Free-running counts per frame: f_free * n_phases * R / f_tdc."""
+        return (
+            self.f_free_hz
+            * self.n_phases
+            * self.decimation
+            / self.f_tdc
+        )
+
+    def counts_per_frame(self, u: float) -> float:
+        """Ideal (unquantized) counts for constant rectified input u."""
+        return (
+            (self.f_free_hz + self.k_sro_hz * u)
+            * self.n_phases
+            * self.decimation
+            / self.f_tdc
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class TDFExState:
+    """Per-chip mismatch realization (drawn once per simulated die)."""
+
+    gain_mismatch: jnp.ndarray  # (C,) multiplicative, ~N(0, sigma)
+    cf_mismatch: jnp.ndarray  # (C,) multiplicative on f0
+
+
+def draw_chip(key: jax.Array, cfg: TDFExConfig) -> TDFExState:
+    k1, k2 = jax.random.split(key)
+    c = cfg.fex.num_channels
+    return TDFExState(
+        gain_mismatch=cfg.gain_mismatch_sigma
+        * jax.random.normal(k1, (c,), jnp.float32),
+        cf_mismatch=cfg.cf_mismatch_sigma
+        * jax.random.normal(k2, (c,), jnp.float32),
+    )
+
+
+def vtc(
+    audio: jnp.ndarray,
+    cfg: TDFExConfig,
+    key: Optional[jax.Array] = None,
+    audio_rate: bool = True,
+) -> jnp.ndarray:
+    """VTC: audio at fs_audio -> PWM duty at fs_internal (32 kHz).
+
+    The FLL linearization makes f_FLL = V_IN / (15 R C V_REF) — linear — so
+    the behavioral duty equals the input, plus small even/odd distortion
+    from residual single-ended asymmetry and input-referred noise.
+
+    audio_rate=False means the stimulus is already at fs_internal — used by
+    the calibration/measurement path, where an *analog* function generator
+    drives V_IN,VTC directly (Fig. 16) and is not band-limited to 8 kHz by
+    the dataset's sample rate.
+    """
+    x = (
+        oversample2x(audio)
+        if (audio_rate and cfg.fex.oversample == 2)
+        else audio
+    )
+    hd2 = 10.0 ** (cfg.vtc_hd2_db / 20.0)
+    hd3 = 10.0 ** (cfg.vtc_hd3_db / 20.0)
+    y = x + hd2 * x * x + hd3 * x * x * x
+    if key is not None and cfg.input_noise_rms > 0:
+        y = y + cfg.input_noise_rms * jax.random.normal(
+            key, y.shape, y.dtype
+        )
+    return y
+
+
+def rec_bpf(
+    duty: jnp.ndarray, cfg: TDFExConfig, chip: Optional[TDFExState] = None
+) -> jnp.ndarray:
+    """16-channel rectifying BPF: duty (B, T) -> rectified (B, T, C).
+
+    Center-frequency mismatch is applied by redesigning the per-channel
+    biquad at f0*(1+eps) — the FLL bias error moves omega_0 per eq. (6).
+    """
+    fexc = cfg.fex
+    if chip is None:
+        coeffs = fexc.filterbank()
+    else:
+        from repro.core.filters import design_bandpass_biquad
+
+        f0 = np.asarray(
+            design_filterbank(
+                fexc.num_channels, fexc.fs_internal, fexc.f_lo, fexc.f_hi, fexc.q
+            ).f0
+        )
+        f0 = f0 * (1.0 + np.asarray(chip.cf_mismatch))
+        f0 = np.clip(f0, 10.0, fexc.fs_internal / 2 * 0.95)
+        coeffs = design_bandpass_biquad(f0, fs=fexc.fs_internal, q=fexc.q)
+    y = biquadfb = biquad_filterbank(duty, coeffs)
+    # PFD-based FWR (Section III-C): UP + DN = |delta phi|.
+    return jnp.abs(y)
+
+
+def sro_tdc(
+    rectified: jnp.ndarray,
+    cfg: TDFExConfig,
+    chip: Optional[TDFExState] = None,
+    key: Optional[jax.Array] = None,
+    return_diff_stream: bool = False,
+):
+    """SRO PFM encoder + 1st-order DeltaSigma TDC + XOR diff + CIC decimate.
+
+    rectified: (B, T, C) at fs_internal. Returns integer counts per frame
+    (B, F, C); optionally also the pre-decimation differentiator stream
+    (B, T*tdc_oversample, C) for spectrum analysis (Fig. 17c).
+    """
+    b, t, c = rectified.shape
+    os = cfg.tdc_oversample
+    # zero-order hold to the TDC rate (64 kHz)
+    u = jnp.repeat(rectified, os, axis=1)  # (B, T*os, C)
+    gain = 1.0
+    if chip is not None:
+        gain = 1.0 + chip.gain_mismatch  # (C,)
+    f_inst = (cfg.f_free_hz + cfg.k_sro_hz * u) * gain  # Hz, >= 0 region
+    f_inst = jnp.maximum(f_inst, 0.0)
+    dt = 1.0 / cfg.f_tdc
+    phase = jnp.cumsum(f_inst * dt, axis=1)  # cycles (lossless integrator)
+    if key is not None and cfg.phase_noise_rms > 0:
+        jitter = cfg.phase_noise_rms * jax.random.normal(
+            key, phase.shape, phase.dtype
+        )
+        phase = phase + jitter
+    counts = jnp.floor(cfg.n_phases * phase)  # 15-phase counter samples
+    # XOR differentiator: first difference of the counter (metastability-free)
+    prev = jnp.concatenate([jnp.zeros_like(counts[:, :1]), counts[:, :-1]], 1)
+    diff = counts - prev
+    # 1st-order CIC with decimation R: boxcar sum of R diffs == telescoped
+    # count increments per frame.
+    r = cfg.decimation
+    n_frames = diff.shape[1] // r
+    d = diff[:, : n_frames * r, :].reshape(b, n_frames, r, c)
+    fv_counts = d.sum(axis=2)
+    if return_diff_stream:
+        return fv_counts, diff
+    return fv_counts
+
+
+def tdfex_raw_counts(
+    audio: jnp.ndarray,
+    cfg: TDFExConfig,
+    chip: Optional[TDFExState] = None,
+    key: Optional[jax.Array] = None,
+    audio_rate: bool = True,
+) -> jnp.ndarray:
+    """audio (B, T) -> TDC counts (B, F, C) — the chip's FV before post-proc."""
+    if key is not None:
+        k_vtc, k_tdc = jax.random.split(key)
+    else:
+        k_vtc = k_tdc = None
+    duty = vtc(audio, cfg, k_vtc, audio_rate=audio_rate)
+    rect = rec_bpf(duty, cfg, chip)
+    return sro_tdc(rect, cfg, chip, k_tdc)
+
+
+def counts_to_fv_raw(
+    counts: jnp.ndarray,
+    cfg: TDFExConfig,
+    beta: jnp.ndarray,
+    alpha: jnp.ndarray,
+) -> jnp.ndarray:
+    """Apply offset/gain calibration and scale into the 12-bit quantizer
+    code domain used by the software model.
+
+    counts_signal = alpha * (counts - beta); the count-domain full scale
+    corresponds to k_sro * quant_full_scale worth of rectified input.
+    """
+    sig = alpha * (counts - beta)
+    full_scale_counts = (
+        cfg.k_sro_hz
+        * cfg.fex.quant_full_scale
+        * cfg.n_phases
+        * cfg.decimation
+        / cfg.f_tdc
+    )
+    codes = sig / full_scale_counts * (2.0**cfg.fex.quant_bits - 1.0)
+    return jnp.clip(jnp.round(codes), 0.0, 2.0**cfg.fex.quant_bits - 1.0)
+
+
+def tdfex_forward(
+    audio: jnp.ndarray,
+    cfg: TDFExConfig,
+    beta: jnp.ndarray,
+    alpha: jnp.ndarray,
+    chip: Optional[TDFExState] = None,
+    key: Optional[jax.Array] = None,
+) -> jnp.ndarray:
+    """Full hardware-sim FEx to FV_Raw codes (B, F, C)."""
+    counts = tdfex_raw_counts(audio, cfg, chip, key)
+    return counts_to_fv_raw(counts, cfg, beta, alpha)

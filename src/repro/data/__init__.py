@@ -1,0 +1,3 @@
+from repro.data.gscd import CLASSES, KEYWORDS, GSCDSynthConfig, make_dataset
+
+__all__ = ["CLASSES", "KEYWORDS", "GSCDSynthConfig", "make_dataset"]

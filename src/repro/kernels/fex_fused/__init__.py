@@ -1,0 +1,4 @@
+from repro.kernels.fex_fused.ops import fex_fused
+from repro.kernels.fex_fused.ref import fex_fused_ref
+
+__all__ = ["fex_fused", "fex_fused_ref"]

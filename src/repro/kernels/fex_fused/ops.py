@@ -1,0 +1,67 @@
+"""jit'd public wrapper for the fused FEx kernel.
+
+Falls back to interpret mode automatically off-TPU so the same call site
+works in CI (CPU, interpret=True validates the kernel body) and in
+production (TPU, compiled Mosaic kernel).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.filters import BiquadCoeffs
+from repro.kernels.fex_fused.kernel import fex_fused_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(
+    jax.jit, static_argnames=("frame_len", "block_batch", "interpret")
+)
+def _fex_fused_jit(x, coeffs_arr, frame_len, block_batch, interpret):
+    return fex_fused_pallas(
+        x,
+        coeffs_arr,
+        frame_len=frame_len,
+        block_batch=block_batch,
+        interpret=interpret,
+    )
+
+
+def fex_fused(
+    x: jnp.ndarray,
+    coeffs: BiquadCoeffs,
+    frame_len: int,
+    block_batch: Optional[int] = None,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Fused biquad + FWR + frame average: (B, T) -> (B, F, C).
+
+    Pads the batch up to the block size and trims T to a whole number of
+    frames, so any (B, T) is accepted.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    if block_batch is None:
+        block_batch = 8 if interpret else 256
+    b, t = x.shape
+    t_use = (t // frame_len) * frame_len
+    x = x[:, :t_use]
+    pad = (-b) % block_batch
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad, t_use), x.dtype)], axis=0)
+    # Coefficients stay f32 regardless of the IO dtype: the 100 Hz
+    # channel's a1 ~ -1.9961 rounds to -1.9922 in bf16, pushing the pole
+    # to the unit circle and blowing the filter up (the analog
+    # equivalent: the FLL bias precision that sets each channel's f0).
+    out = _fex_fused_jit(
+        x, coeffs.stacked(dtype=jnp.float32), frame_len, block_batch,
+        interpret,
+    )
+    return out[:b]

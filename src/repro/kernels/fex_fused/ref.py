@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the fused FEx kernel — composed from the core
+software model so the kernel is checked against the *same* code the
+paper-faithful pipeline uses."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.fex import biquad_filterbank, frame_average, full_wave_rectify
+from repro.core.filters import BiquadCoeffs
+
+
+def fex_fused_ref(
+    x: jnp.ndarray, coeffs: BiquadCoeffs, frame_len: int
+) -> jnp.ndarray:
+    """(B, T) -> (B, T // frame_len, C), unfused reference chain."""
+    y = biquad_filterbank(x, coeffs)
+    return frame_average(full_wave_rectify(y), frame_len)

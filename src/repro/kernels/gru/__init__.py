@@ -1,0 +1,4 @@
+from repro.kernels.gru.ops import gru_sequence
+from repro.kernels.gru.ref import gru_sequence_ref
+
+__all__ = ["gru_sequence", "gru_sequence_ref"]

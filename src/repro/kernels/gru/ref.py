@@ -1,0 +1,20 @@
+"""Oracle for the GRU sequence kernel — delegates to the core float GRU
+(quantization off) so kernel and software model share one definition."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.gru import GRUConfig, gru_layer
+
+
+def gru_sequence_ref(xs, w, u, b_i, b_h, h0):
+    """(T, B, I) time-major in -> (T, B, H) time-major out."""
+    cfg = GRUConfig(
+        input_dim=xs.shape[-1],
+        hidden_dim=u.shape[0],
+        quantized=False,
+    )
+    layer = {"w_i": w, "w_h": u, "b_i": b_i, "b_h": b_h}
+    hs, _ = gru_layer(layer, jnp.moveaxis(xs, 0, 1), cfg, h0=h0)
+    return jnp.moveaxis(hs, 0, 1)

@@ -1,0 +1,4 @@
+from repro.kernels.intgemm.ops import intgemm
+from repro.kernels.intgemm.ref import intgemm_ref
+
+__all__ = ["intgemm", "intgemm_ref"]

@@ -1,0 +1,79 @@
+"""Integer GEMM kernel modeling the IC's HPE datapath (Section III-E).
+
+HPE arithmetic: 14-bit activation x 8-bit weight multiplies into a 24-bit
+saturating accumulator. On TPU the analogue is the MXU's native int8 path
+with int32 accumulation; we saturate the final reduction to the 24-bit
+range so results are bit-identical to the hardware (for the network sizes
+involved, K <= 512, the exact int32 sum cannot overflow before the final
+saturation: |x| < 2^13, |w| < 2^7 -> |x.w| < K * 2^20 < 2^30).
+
+Grid = (M/BM, N/BN, K/BK), K sequential innermost; partial products
+accumulate in an int32 VMEM scratch tile; the last K step saturates to
+[-2^23, 2^23 - 1] and writes out.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+INT24_MAX = 2**23 - 1
+INT24_MIN = -(2**23)
+
+
+def _intgemm_kernel(x_ref, w_ref, out_ref, acc_ref, *, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.int32),
+        w_ref[...].astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    )
+
+    @pl.when(k == n_k - 1)
+    def _write():
+        out_ref[...] = jnp.clip(acc_ref[...], INT24_MIN, INT24_MAX)
+
+
+def intgemm_pallas(
+    x: jnp.ndarray,  # (M, K) int16 activation codes (14-bit range)
+    w: jnp.ndarray,  # (K, N) int8 weight codes
+    *,
+    block_m: int = 8,
+    block_n: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Saturating 24-bit integer matmul -> (M, N) int32 codes."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2
+    if m % block_m or n % block_n or k % block_k:
+        raise ValueError(
+            f"shapes ({m},{k})x({k},{n}) not multiples of blocks "
+            f"({block_m},{block_k},{block_n})"
+        )
+    n_k = k // block_k
+    import functools
+
+    return pl.pallas_call(
+        functools.partial(_intgemm_kernel, n_k=n_k),
+        grid=(m // block_m, n // block_n, n_k),
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.int32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(x, w)

@@ -1,0 +1,42 @@
+"""jit'd wrapper with shape padding and auto-interpret off TPU."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.intgemm.kernel import intgemm_pallas
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "block_k", "interpret")
+)
+def _intgemm_jit(x, w, block_m, block_n, block_k, interpret):
+    return intgemm_pallas(
+        x, w,
+        block_m=block_m, block_n=block_n, block_k=block_k,
+        interpret=interpret,
+    )
+
+
+def intgemm(
+    x: jnp.ndarray,  # (M, K) int (14-bit activation codes)
+    w: jnp.ndarray,  # (K, N) int8 weight codes
+    block_m: int = 8,
+    block_n: int = 128,
+    block_k: int = 128,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Saturating-24-bit int matmul, any (M, K, N) via zero padding."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    m, k = x.shape
+    n = w.shape[1]
+    pm, pk, pn = (-m) % block_m, (-k) % block_k, (-n) % block_n
+    xp = jnp.pad(x.astype(jnp.int32), ((0, pm), (0, pk)))
+    wp = jnp.pad(w.astype(jnp.int32), ((0, pk), (0, pn)))
+    out = _intgemm_jit(xp, wp, block_m, block_n, block_k, interpret)
+    return out[:m, :n]

@@ -1,0 +1,17 @@
+"""Oracle: exact int32 matmul with final 24-bit saturation."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+INT24_MAX = 2**23 - 1
+INT24_MIN = -(2**23)
+
+
+def intgemm_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    acc = jnp.dot(
+        x.astype(jnp.int32),
+        w.astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    )
+    return jnp.clip(acc, INT24_MIN, INT24_MAX)

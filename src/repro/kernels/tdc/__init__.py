@@ -1,0 +1,4 @@
+from repro.kernels.tdc.ops import tdc_counts
+from repro.kernels.tdc.ref import tdc_counts_ref
+
+__all__ = ["tdc_counts", "tdc_counts_ref"]

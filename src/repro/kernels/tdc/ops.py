@@ -1,0 +1,60 @@
+"""jit'd wrapper for the TDC kernel, config-aware."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tdfex import TDFExConfig, TDFExState
+from repro.kernels.tdc.kernel import tdc_pallas
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "samples_per_frame", "os", "f_tdc", "n_phases",
+        "block_batch", "interpret",
+    ),
+)
+def _tdc_jit(u, f0_eff, k_eff, samples_per_frame, os, f_tdc, n_phases,
+             block_batch, interpret):
+    return tdc_pallas(
+        u, f0_eff, k_eff,
+        samples_per_frame=samples_per_frame, os=os, f_tdc=f_tdc,
+        n_phases=n_phases, block_batch=block_batch, interpret=interpret,
+    )
+
+
+def tdc_counts(
+    u: jnp.ndarray,  # (B, T, C) rectified @ fs_internal
+    cfg: TDFExConfig,
+    chip: Optional[TDFExState] = None,
+    block_batch: Optional[int] = None,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Config-level entry point: (B, T, C) -> (B, F, C) counts."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if block_batch is None:
+        block_batch = 8 if interpret else 128
+    c = u.shape[-1]
+    gain = jnp.ones((c,), jnp.float32)
+    if chip is not None:
+        gain = 1.0 + chip.gain_mismatch
+    f0_eff = cfg.f_free_hz * gain
+    k_eff = cfg.k_sro_hz * gain
+    samples_per_frame = cfg.decimation // cfg.tdc_oversample
+    b = u.shape[0]
+    pad = (-b) % block_batch
+    if pad:
+        u = jnp.concatenate(
+            [u, jnp.zeros((pad,) + u.shape[1:], u.dtype)], axis=0
+        )
+    out = _tdc_jit(
+        u, f0_eff, k_eff, samples_per_frame, cfg.tdc_oversample,
+        cfg.f_tdc, cfg.n_phases, block_batch, interpret,
+    )
+    return out[:b]

@@ -1,0 +1,38 @@
+"""Oracle for the TDC kernel: exact float64 fractional-carry simulation
+(numpy), plus a helper that reproduces `repro.core.tdfex.sro_tdc`'s
+cumsum/floor/diff formulation — the two agree exactly in float64."""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def tdc_counts_ref(
+    u: np.ndarray,  # (B, T, C) rectified input at the internal rate
+    f0_eff: np.ndarray,  # (C,)
+    k_eff: np.ndarray,  # (C,)
+    samples_per_frame: int,
+    os: int,
+    f_tdc: float,
+    n_phases: int = 15,
+) -> np.ndarray:
+    """Exact float64 reference: (B, F, C) counts."""
+    u = np.asarray(u, np.float64)
+    b, t, c = u.shape
+    n_frames = t // samples_per_frame
+    u = u[:, : n_frames * samples_per_frame, :]
+    # ZOH to the TDC rate, then cumsum phase / floor / frame-diff.
+    uu = np.repeat(u, os, axis=1)
+    f = np.maximum(
+        np.asarray(f0_eff, np.float64)[None, None, :]
+        + np.asarray(k_eff, np.float64)[None, None, :] * uu,
+        0.0,
+    )
+    phase = np.cumsum(f / f_tdc, axis=1)
+    counts = np.floor(n_phases * phase)
+    ticks_per_frame = samples_per_frame * os
+    frame_edges = counts[:, ticks_per_frame - 1 :: ticks_per_frame, :]
+    prev = np.concatenate(
+        [np.zeros((b, 1, c)), frame_edges[:, :-1, :]], axis=1
+    )
+    return (frame_edges - prev).astype(np.float64)

@@ -1,0 +1,43 @@
+"""jit'd wrapper: batch padding + auto interpret off TPU."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.wkv6.kernel import wkv6_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("block_batch", "interpret"))
+def _wkv6_jit(r, k, v, logw, u, block_batch, interpret):
+    return wkv6_pallas(
+        r, k, v, logw, u, block_batch=block_batch, interpret=interpret
+    )
+
+
+def wkv6(
+    r: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    logw: jnp.ndarray,
+    u: jnp.ndarray,
+    block_batch: Optional[int] = None,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """(B, T, H, P) x4 + (H, P) -> (B, T, H, P), state-resident."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if block_batch is None:
+        block_batch = 2 if interpret else 8
+    b = r.shape[0]
+    pad = (-b) % block_batch
+    if pad:
+        z = lambda x: jnp.concatenate(  # noqa: E731
+            [x, jnp.zeros((pad,) + x.shape[1:], x.dtype)], axis=0
+        )
+        r, k, v, logw = z(r), z(k), z(v), z(logw)
+    out = _wkv6_jit(r, k, v, logw, u, block_batch, interpret)
+    return out[:b]

@@ -1,0 +1,8 @@
+"""Oracle: the backbone's own sequential WKV6 (already validated against
+the chunked training formulation in tests/test_ssm_kernels.py)."""
+
+from repro.models.rwkv6 import wkv6_sequential
+
+
+def wkv6_ref(r, k, v, logw, u):
+    return wkv6_sequential(r, k, v, logw, u)

@@ -1,0 +1,180 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+on the production meshes and emit the roofline table.
+
+The two lines above MUST stay the first statements in this module: jax
+locks the device count at first init, and the dry-run needs 512
+placeholder host devices for the 2x16x16 production mesh. (Tests and
+benches import everything EXCEPT this module and see 1 device.)
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod-check
+
+Per cell it prints memory_analysis() + cost_analysis() (the spec's
+required proof-of-fit) and writes a CellReport JSON with the three
+roofline terms (launch/roofline.py). The multi-pod pass compiles the
+same cell on the (2,16,16) mesh to prove the "pod" axis shards; roofline
+terms are reported on the single-pod 16x16 mesh.
+"""
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import SHAPES, get_config, list_archs
+from repro.launch.mesh import make_production_mesh, make_rules
+from repro.launch.roofline import make_report
+from repro.serving.serve_loop import lower_decode_step, lower_prefill
+from repro.training.optimizer import AdamWConfig
+from repro.training.train_loop import TrainConfig, lower_train_step
+
+import jax.numpy as jnp
+
+
+def train_batch_shape(arch_cfg, shape_spec):
+    b, s = shape_spec.global_batch, shape_spec.seq_len
+    if arch_cfg.frontend == "embedding":
+        return {
+            "embeddings": jax.ShapeDtypeStruct(
+                (b, s, arch_cfg.d_model), arch_cfg.activation_dtype
+            ),
+            "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        }
+    return {
+        "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+    }
+
+
+def arch_train_config(arch_cfg) -> TrainConfig:
+    """The 1T MoE needs int8 optimizer moments to fit (DESIGN.md §6)."""
+    state_dtype = "int8" if arch_cfg.param_count() > 100e9 else "float32"
+    return TrainConfig(optimizer=AdamWConfig(state_dtype=state_dtype))
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool = False, note: str = "",
+             overrides: dict | None = None):
+    """Lower+compile one cell; returns (CellReport, compiled).
+
+    Long-context prefill defaults to flash-style KV chunking (2048): the
+    vanilla (S, S) score materialization transiently needs >16 GB/device
+    at 32k and would not fit HBM — the unchunked variant is measured once
+    in EXPERIMENTS.md §Perf for comparison. `overrides` replaces arbitrary
+    ArchConfig fields (the §Perf iteration hook).
+    """
+    import dataclasses as _dc
+
+    arch_cfg = get_config(arch)
+    shape_spec = SHAPES[shape]
+    if shape_spec.kind == "prefill" and shape_spec.seq_len >= 16384:
+        arch_cfg = _dc.replace(arch_cfg, attn_chunk=2048)
+    if overrides:
+        arch_cfg = _dc.replace(arch_cfg, **overrides)
+    if shape in arch_cfg.skip_shapes:
+        raise SystemExit(
+            f"{arch} skips {shape} (see DESIGN.md §Arch-applicability)"
+        )
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    big = arch_cfg.param_count() > 100e9
+    rules = make_rules(mesh, fsdp_over_pod=big)
+    chips = 512 if multi_pod else 256
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+
+    t0 = time.time()
+    if shape_spec.kind == "train":
+        lowered, _, _ = lower_train_step(
+            arch_cfg, rules, train_batch_shape(arch_cfg, shape_spec),
+            arch_train_config(arch_cfg),
+        )
+    elif shape_spec.kind == "prefill":
+        lowered, _ = lower_prefill(arch_cfg, rules, shape_spec)
+    else:
+        lowered, _, _ = lower_decode_step(arch_cfg, rules, shape_spec)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    report = make_report(
+        arch_cfg, shape_spec, mesh_name, chips, compiled,
+        shape_spec.kind, note=note,
+    )
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis()
+    print(
+        f"[{arch} x {shape} @ {mesh_name}] lower {t_lower:.1f}s "
+        f"compile {t_compile:.1f}s | peak/dev "
+        f"{ma.peak_memory_in_bytes / 1e9:.2f} GB, args "
+        f"{ma.argument_size_in_bytes / 1e9:.2f} GB | "
+        f"cost_analysis flops={ca.get('flops', 0):.3e} (while bodies "
+        f"counted once) | parsed flops/dev {report.hlo_flops:.3e}"
+    )
+    print(
+        f"  roofline: compute {report.compute_s * 1e3:.2f} ms, memory "
+        f"{report.memory_s * 1e3:.2f} ms, collective "
+        f"{report.collective_s * 1e3:.2f} ms -> {report.dominant}-bound; "
+        f"useful-ratio {report.useful_ratio:.2f}, roofline fraction "
+        f"{report.roofline_fraction:.2%}"
+    )
+    return report, compiled
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list_archs())
+    ap.add_argument("--shape", choices=sorted(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="compile on the 2x16x16 mesh instead of 16x16")
+    ap.add_argument("--out", default=None, help="directory for JSON reports")
+    ap.add_argument("--note", default="")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in list_archs():
+            cfg = get_config(arch)
+            for shape in SHAPES:
+                if shape not in cfg.skip_shapes:
+                    cells.append((arch, shape))
+    else:
+        if not (args.arch and args.shape):
+            ap.error("--arch and --shape required unless --all")
+        cells = [(args.arch, args.shape)]
+
+    failures = []
+    for arch, shape in cells:
+        try:
+            report, _ = run_cell(arch, shape, args.multi_pod, args.note)
+            if args.out:
+                os.makedirs(args.out, exist_ok=True)
+                tag = "mp" if args.multi_pod else "sp"
+                fn = os.path.join(
+                    args.out, f"{arch}__{shape}__{tag}.json"
+                )
+                with open(fn, "w") as f:
+                    json.dump(report.to_json(), f, indent=2)
+        except SystemExit:
+            raise
+        except Exception as e:  # noqa: BLE001 — record and continue
+            traceback.print_exc()
+            failures.append((arch, shape, repr(e)))
+    if failures:
+        print("FAILURES:")
+        for f in failures:
+            print(" ", f)
+        sys.exit(1)
+    print(f"dry-run OK: {len(cells)} cells")
+
+
+if __name__ == "__main__":
+    main()

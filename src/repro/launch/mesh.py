@@ -1,0 +1,41 @@
+"""Production mesh definitions.
+
+Importing this module never touches jax device state; meshes are built
+inside functions only (the dry-run sets XLA_FLAGS *before* any jax
+import — see launch/dryrun.py).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+__all__ = ["make_production_mesh", "make_rules", "mesh_device_count"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """v5e pod mesh: 16x16 = 256 chips per pod; 2 pods = 512 chips."""
+    import jax
+
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_device_count(*, multi_pod: bool = False) -> int:
+    return 512 if multi_pod else 256
+
+
+def make_rules(mesh, *, fsdp: bool = True, fsdp_over_pod: bool = False):
+    """ShardingRules for a production mesh (single- or multi-pod)."""
+    from repro.distributed.sharding import ShardingRules
+
+    multi_pod = "pod" in mesh.axis_names
+    dp_axes = ("pod", "data") if multi_pod else ("data",)
+    fsdp_axes = dp_axes if (multi_pod and fsdp_over_pod) else ("data",)
+    return ShardingRules(
+        mesh=mesh,
+        dp_axes=dp_axes,
+        model_axis="model",
+        fsdp_axes=fsdp_axes,
+        fsdp=fsdp,
+    )

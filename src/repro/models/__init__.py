@@ -1,0 +1,3 @@
+from repro.models.registry import get_backbone
+
+__all__ = ["get_backbone"]

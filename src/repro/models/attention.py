@@ -1,0 +1,244 @@
+"""GQA attention: train (full-sequence causal), prefill, and decode-step
+paths, with the variant knobs the assigned archs need — qk-norm (Qwen3),
+attention logit soft-capping (Gemma-2), sliding windows (Gemma-2 local
+layers / Mistral), and optional flash-style KV chunking (perf lever).
+
+Shapes: q (B, S, H, D); k, v (B, Skv, KV, D) with H % KV == 0.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, dense_init, rms_norm, rope, softcap
+
+__all__ = ["attn_init", "attention_scores_apply", "attn_apply", "decode_attn_apply"]
+
+NEG_INF = -2.0**30  # large-negative fill that survives bf16 softmax
+
+
+def attn_init(key, d_model: int, n_heads: int, n_kv: int, head_dim: int,
+              qk_norm: bool):
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": dense_init(ks[0], (d_model, n_heads, head_dim)),
+        "wk": dense_init(ks[1], (d_model, n_kv, head_dim)),
+        "wv": dense_init(ks[2], (d_model, n_kv, head_dim)),
+        "wo": dense_init(
+            ks[3], (n_heads, head_dim, d_model), fan_in=n_heads * head_dim
+        ),
+    }
+    if qk_norm:
+        p["q_norm"] = jnp.zeros((head_dim,), jnp.float32)
+        p["k_norm"] = jnp.zeros((head_dim,), jnp.float32)
+    return p
+
+
+def _mask(
+    q_pos: jnp.ndarray,  # (S,) or (B, S)
+    kv_pos: jnp.ndarray,  # (Skv,)
+    causal: bool,
+    window: Optional[int],
+    kv_len: Optional[jnp.ndarray],  # scalar: valid cache length
+):
+    """Boolean (…, S, Skv) mask of allowed attention edges."""
+    qp = q_pos[..., :, None]
+    kp = kv_pos[None, :]
+    m = jnp.ones(jnp.broadcast_shapes(qp.shape, (kv_pos.shape[0],)), bool)
+    if causal:
+        m = m & (kp <= qp)
+    if window is not None:
+        m = m & (kp > qp - window)
+    if kv_len is not None:
+        m = m & (kp < kv_len)
+    return m
+
+
+def _sdpa(q, k, v, mask, scale, cap, chunk, head_pad=None, mesh_ctx=None):
+    """q (B,S,H,D), k/v (B,Skv,KV,D), mask (S,Skv) or (B,S,Skv).
+
+    GQA is materialized by repeating KV heads to H before the einsums:
+    every contraction then carries the intact head axis, which shards
+    cleanly over the "model" mesh axis. (Splitting H into (KV, G) inside
+    the einsum makes the head sharding inexpressible to GSPMD — measured
+    16x replicated attention compute on the 16-way axis; see
+    EXPERIMENTS.md §Dry-run.)
+
+    head_pad: zero-pad the head axis to this count before the einsums
+    and slice the pad off after — pure layout, zero semantic change.
+    24-head stacks on a 16-way model axis otherwise hit GSPMD's
+    "involuntary full rematerialization" (measured 6-10x memory term on
+    musicgen/phi4/granite; EXPERIMENTS.md §Perf).
+    """
+    b, s, h, d = q.shape
+    skv, kv = k.shape[1], k.shape[2]
+    g = h // kv  # query groups per kv head
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    h_real = h
+    if head_pad is not None and head_pad > h:
+        def pad_heads(t):
+            z = jnp.zeros(
+                t.shape[:2] + (head_pad - h,) + t.shape[3:], t.dtype
+            )
+            return jnp.concatenate([t, z], axis=2)
+
+        q, k, v = pad_heads(q), pad_heads(k), pad_heads(v)
+        h = head_pad
+        if mesh_ctx is not None:
+            q = mesh_ctx.constrain_heads(q)
+            k = mesh_ctx.constrain_heads(k)
+            v = mesh_ctx.constrain_heads(v)
+    if mask.ndim == 2:
+        mask = mask[None]
+    mask_b = mask[:, None, :, :]  # (B,1,S,Skv)
+
+    def block_scores(k_blk, mask_blk):
+        sc = jnp.einsum("bshd,bthd->bhst", q, k_blk) * scale
+        sc = softcap(sc, cap)
+        return jnp.where(mask_blk, sc, NEG_INF)
+
+    if chunk is None or skv <= chunk:
+        sc = block_scores(k, mask_b)
+        w = jax.nn.softmax(sc.astype(jnp.float32), axis=-1).astype(q.dtype)
+        return jnp.einsum("bhst,bthd->bshd", w, v)[:, :, :h_real]
+
+    # flash-style streaming softmax over KV chunks (perf lever;
+    # numerically identical up to fp accumulation order)
+    n_blk = skv // chunk
+    kb = k.reshape(b, n_blk, chunk, h, d)
+    vb = v.reshape(b, n_blk, chunk, h, d)
+
+    def body(carry, inputs):
+        m_run, l_run, acc = carry
+        k_blk, v_blk, idx = inputs
+        mask_blk = jax.lax.dynamic_slice_in_dim(
+            mask_b, idx * chunk, chunk, axis=-1
+        )
+        sc = block_scores(k_blk, mask_blk).astype(jnp.float32)
+        m_new = jnp.maximum(m_run, sc.max(axis=-1))
+        alpha = jnp.exp(m_run - m_new)
+        p = jnp.exp(sc - m_new[..., None])
+        l_new = l_run * alpha + p.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhst,bthd->bhsd", p.astype(q.dtype), v_blk
+        ).astype(jnp.float32)
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, h, s), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, h, s), jnp.float32)
+    a0 = jnp.zeros((b, h, s, d), jnp.float32)
+    (m_f, l_f, acc), _ = jax.lax.scan(
+        body,
+        (m0, l0, a0),
+        (
+            jnp.moveaxis(kb, 1, 0),
+            jnp.moveaxis(vb, 1, 0),
+            jnp.arange(n_blk),
+        ),
+    )
+    out = acc / jnp.maximum(l_f, 1e-30)[..., None]
+    return jnp.moveaxis(out, 2, 1).astype(q.dtype)[:, :, :h_real]
+
+
+def _sdpa_grouped(q, k, v, mask, scale, cap):
+    """Decode-step attention (S_q == 1): grouped-query einsums read each
+    KV head exactly once (no repeat — the KV cache read IS the decode
+    roofline). q is tiny and replicated over "model"; the cache shards on
+    its sequence axis, so the softmax reduces over a sharded dim —
+    flash-decoding realized by GSPMD collectives."""
+    b, s, h, d = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, s, kv, g, d)
+    sc = jnp.einsum("bskgd,btkd->bkgst", qg, k) * scale
+    sc = softcap(sc, cap)
+    sc = jnp.where(mask[:, None, None, :, :], sc, NEG_INF)
+    w = jax.nn.softmax(sc.astype(jnp.float32), axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v)
+    return out.reshape(b, s, h, d)
+
+
+def _project_qkv(p, x, cfg, positions):
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhe->bshe", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhe->bshe", x, p["wv"].astype(dt))
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    cos, sin = rope(positions, cfg.resolved_head_dim, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def attn_apply(
+    p,
+    x: jnp.ndarray,  # (B, S, d)
+    cfg,
+    window: Optional[int] = None,
+    cache: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+    mesh_ctx=None,
+):
+    """Training / prefill attention. Returns (out, (k, v)) — the kv pair
+    becomes the prefill cache."""
+    b, s, _ = x.shape
+    positions = jnp.arange(s)
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    mask = _mask(positions, positions, True, window, None)
+    scale = 1.0 / math.sqrt(cfg.resolved_head_dim)
+    out = _sdpa(
+        q, k, v, mask, scale, cfg.attn_softcap, cfg.attn_chunk,
+        head_pad=cfg.attn_head_pad, mesh_ctx=mesh_ctx,
+    )
+    out = jnp.einsum("bshe,hed->bsd", out, p["wo"].astype(x.dtype))
+    return out, (k, v)
+
+
+def decode_attn_apply(
+    p,
+    x: jnp.ndarray,  # (B, 1, d)
+    cfg,
+    k_cache: jnp.ndarray,  # (B, Smax, KV, D)
+    v_cache: jnp.ndarray,
+    cache_len: jnp.ndarray,  # scalar int32: tokens already in cache
+    ring: bool = False,
+):
+    """Single decode step. ring=False: append at cache_len, attend the
+    causal prefix (global layers). ring=True: the cache is a sliding-
+    window ring buffer of size Smax == window; insert at cache_len % Smax
+    and attend every valid slot (keys carry absolute RoPE, so slot order
+    is irrelevant). Returns (out, k_cache, v_cache)."""
+    s_max = k_cache.shape[1]
+    positions = cache_len[None]  # (1,) absolute position for RoPE
+    q, k_new, v_new = _project_qkv(p, x, cfg, positions)
+    ins = cache_len % s_max if ring else cache_len
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        k_cache, k_new.astype(k_cache.dtype), ins, axis=1
+    )
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        v_cache, v_new.astype(v_cache.dtype), ins, axis=1
+    )
+    kv_pos = jnp.arange(s_max)
+    if ring:
+        mask = (kv_pos < jnp.minimum(cache_len + 1, s_max))[None, None, :]
+    else:
+        mask = _mask(positions, kv_pos, True, None, cache_len + 1)[None]
+    scale = 1.0 / math.sqrt(cfg.resolved_head_dim)
+    out = _sdpa_grouped(
+        q,
+        k_cache.astype(q.dtype),
+        v_cache.astype(q.dtype),
+        jnp.broadcast_to(mask, (x.shape[0], 1, s_max)),
+        scale,
+        cfg.attn_softcap,
+    )
+    out = jnp.einsum("bshe,hed->bsd", out, p["wo"].astype(x.dtype))
+    return out, k_cache, v_cache

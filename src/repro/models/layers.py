@@ -1,0 +1,106 @@
+"""Shared building blocks for all assigned architectures.
+
+Parameter trees are plain nested dicts of jnp arrays; scanned layer
+stacks carry a leading (n_steps,) axis. Initializers take an explicit key
+and return float32 masters cast to the activation dtype by the caller
+(training keeps fp32 masters in the optimizer, not in the model).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "rms_norm",
+    "softcap",
+    "rope",
+    "apply_rope",
+    "dense_init",
+    "mlp_init",
+    "mlp_apply",
+    "cross_entropy_loss",
+]
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6):
+    """RMSNorm with the (1 + scale) parameterization (Gemma/LLaMA style).
+
+    Statistics in fp32 regardless of activation dtype.
+    """
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+def softcap(x: jnp.ndarray, cap: Optional[float]):
+    """Gemma-2 logit soft-capping: cap * tanh(x / cap)."""
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def rope(positions: jnp.ndarray, head_dim: int, theta: float):
+    """positions (...,) -> (cos, sin) each (..., head_dim/2), fp32."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray):
+    """x (..., S, H, D); cos/sin (..., S, D/2) — rotate pairs (split halves)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :].astype(x.dtype)  # broadcast over heads
+    s = sin[..., None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+def dense_init(key, shape, fan_in: Optional[int] = None):
+    fan_in = fan_in if fan_in is not None else shape[0]
+    std = 1.0 / math.sqrt(fan_in)
+    return jax.random.normal(key, shape, jnp.float32) * std
+
+
+def mlp_init(key, d_model: int, d_ff: int, act: str):
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_up": dense_init(ks[0], (d_model, d_ff)),
+        "w_down": dense_init(ks[1], (d_ff, d_model), fan_in=d_ff),
+    }
+    if act in ("swiglu", "geglu"):
+        p["w_gate"] = dense_init(ks[2], (d_model, d_ff))
+    return p
+
+
+def mlp_apply(p, x: jnp.ndarray, act: str):
+    dt = x.dtype
+    up = x @ p["w_up"].astype(dt)
+    if act == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"].astype(dt)) * up
+    elif act == "geglu":
+        h = jax.nn.gelu(x @ p["w_gate"].astype(dt), approximate=True) * up
+    elif act == "gelu":
+        h = jax.nn.gelu(up, approximate=True)
+    else:
+        raise ValueError(act)
+    return h @ p["w_down"].astype(dt)
+
+
+def cross_entropy_loss(
+    logits: jnp.ndarray,  # (B, S, V)
+    labels: jnp.ndarray,  # (B, S) int32
+    final_cap: Optional[float] = None,
+) -> jnp.ndarray:
+    logits = softcap(logits, final_cap).astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, labels[..., None].astype(jnp.int32), axis=-1
+    )[..., 0]
+    return jnp.mean(logz - gold)

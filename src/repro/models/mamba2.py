@@ -1,0 +1,257 @@
+"""Mamba2 (SSD) blocks — the Zamba2 backbone's workhorse.
+
+Selective state-space recurrence per head h (state N x P):
+    S_t = a_t * S_{t-1} + dt_t * B_t (x) x_t        a_t = exp(dt_t * A_h)
+    y_t = C_t . S_t + D_h * x_t
+with x gated by silu(z) and a gated RMSNorm before out_proj (Mamba2
+arXiv:2405.21060).
+
+Training uses the chunked SSD algorithm (chunk Q): intra-chunk work is a
+masked (Q, Q) matmul per head, inter-chunk state flows through a
+lax.scan — O(L*Q) instead of O(L^2), exact (not an approximation), and
+every decay factor appears as exp(difference <= 0), so nothing
+overflows. A sequential-scan oracle (`ssd_sequential`) backs the tests.
+
+TP: heads shard over "model" (w_z/w_x column-parallel, out_proj
+row-parallel); B/C projections are per-group (G=1) and replicated.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rms_norm
+
+Params = Dict[str, Any]
+
+
+def mamba2_block_init(key, cfg) -> Params:
+    ssm = cfg.ssm
+    d = cfg.d_model
+    d_in = ssm.expand * d
+    n_heads = d_in // ssm.head_dim
+    ks = jax.random.split(key, 8)
+    return {
+        "ln": jnp.zeros((d,), jnp.float32),
+        "w_z": dense_init(ks[0], (d, d_in)),
+        "w_x": dense_init(ks[1], (d, d_in)),
+        "w_B": dense_init(ks[2], (d, ssm.d_state)),
+        "w_C": dense_init(ks[3], (d, ssm.d_state)),
+        "w_dt": dense_init(ks[4], (d, n_heads)),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "A_log": jnp.zeros((n_heads,), jnp.float32),  # A = -exp(A_log)
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "conv_w": dense_init(ks[5], (ssm.d_conv, d_in), fan_in=ssm.d_conv),
+        "conv_b": jnp.zeros((d_in,), jnp.float32),
+        "gn": jnp.zeros((d_in,), jnp.float32),  # gated RMSNorm scale
+        "out_proj": dense_init(ks[6], (d_in, d), fan_in=d_in),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv along time. x (B, L, C), w (K, C).
+
+    state (B, K-1, C) carries the last K-1 inputs for streaming decode;
+    returns (y, new_state)."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, L+K-1, C)
+    y = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None, :].astype(x.dtype)
+        for i in range(k)
+    )
+    y = y + b.astype(x.dtype)
+    new_state = xp[:, -(k - 1) :, :] if k > 1 else None
+    return jax.nn.silu(y), new_state
+
+
+def _ssd_chunked(xh, a_log, bmat, cmat, chunk):
+    """Chunked SSD scan.
+
+    xh   : (B, L, H, P)   dt-premultiplied inputs (dt folded into x)
+    a_log: (B, L, H)      per-step log decay (= dt * A <= 0)
+    bmat : (B, L, N)      input projections (shared across heads, G=1)
+    cmat : (B, L, N)      output projections
+    returns y (B, L, H, P), final state (B, H, N, P)
+    """
+    b, l, h, p = xh.shape
+    n = bmat.shape[-1]
+    q = min(chunk, l)
+    pad = (-l) % q
+    if pad:
+        # zero-pad (x=0 adds nothing, a_log=0 preserves state — exact)
+        xh = jnp.concatenate(
+            [xh, jnp.zeros((b, pad, h, p), xh.dtype)], axis=1
+        )
+        a_log = jnp.concatenate(
+            [a_log, jnp.zeros((b, pad, h), a_log.dtype)], axis=1
+        )
+        bmat = jnp.concatenate(
+            [bmat, jnp.zeros((b, pad, n), bmat.dtype)], axis=1
+        )
+        cmat = jnp.concatenate(
+            [cmat, jnp.zeros((b, pad, n), cmat.dtype)], axis=1
+        )
+    nc = (l + pad) // q
+    xh = xh.reshape(b, nc, q, h, p)
+    a_log = a_log.reshape(b, nc, q, h).astype(jnp.float32)
+    bmat = bmat.reshape(b, nc, q, n)
+    cmat = cmat.reshape(b, nc, q, n)
+
+    il = jnp.cumsum(a_log, axis=2)  # inclusive log-decay (b, nc, q, h)
+    total = il[:, :, -1, :]  # (b, nc, h)
+
+    # intra-chunk: y_t reads S_t AFTER the step-t update, so input j
+    # contributes to output t >= j with decay prod_{s=j+1..t} a_s
+    # = exp(il_t - il_j); t == j gives decay 1 (the diagonal).
+    cb = jnp.einsum("bcin,bcjn->bcij", cmat, bmat)  # (b, nc, q, q)
+    ratio = jnp.exp(
+        jnp.clip(il[:, :, :, None, :] - il[:, :, None, :, :], -60.0, 0.0)
+    )  # (b, nc, t, j, h); <= 1 wherever t >= j
+    tri = jnp.tril(jnp.ones((q, q), bool))  # t >= j, diagonal included
+    scores = cb[..., None] * jnp.where(
+        tri[None, None, :, :, None], ratio, 0.0
+    ).astype(cb.dtype)
+    y_intra = jnp.einsum(
+        "bcijh,bcjhp->bcihp", scores.astype(xh.dtype), xh
+    )
+
+    # chunk-local end states: S_c = sum_j exp(total - il_j) B_j (x) x_j
+    decay_to_end = jnp.exp(
+        jnp.clip(total[:, :, None, :] - il, -60.0, 0.0)
+    )  # (b, nc, q, h)
+    s_local = jnp.einsum(
+        "bcjn,bcjh,bcjhp->bchnp",
+        bmat,
+        decay_to_end.astype(xh.dtype),
+        xh,
+    )  # (b, nc, h, n, p)
+
+    # inter-chunk scan over nc
+    def step(s_prev, inputs):
+        s_loc, tot = inputs  # (b,h,n,p), (b,h)
+        s_new = s_prev * jnp.exp(tot)[:, :, None, None].astype(s_prev.dtype) + s_loc
+        return s_new, s_prev
+
+    s0 = jnp.zeros((b, h, n, p), xh.dtype)
+    s_final, s_prevs = jax.lax.scan(
+        step,
+        s0,
+        (jnp.moveaxis(s_local, 1, 0), jnp.moveaxis(total, 1, 0)),
+    )
+    s_prevs = jnp.moveaxis(s_prevs, 0, 1)  # (b, nc, h, n, p) state at chunk start
+
+    # inter-chunk contribution: the carried state decays through step t
+    # inclusive: y_t += C_t . (exp(il_t) * S_chunk_start)
+    y_inter = jnp.einsum(
+        "bcin,bcih,bchnp->bcihp",
+        cmat,
+        jnp.exp(il).astype(xh.dtype),
+        s_prevs,
+    )
+    y = (y_intra + y_inter).reshape(b, l + pad, h, p)[:, :l]
+    return y, s_final
+
+
+def ssd_sequential(xh, a_log, bmat, cmat):
+    """Oracle: direct per-step recurrence (tests only)."""
+    b, l, h, p = xh.shape
+    n = bmat.shape[-1]
+
+    def step(s, inputs):
+        x_t, a_t, b_t, c_t = inputs
+        s = s * jnp.exp(a_t)[:, :, None, None] + jnp.einsum(
+            "bn,bhp->bhnp", b_t, x_t
+        )
+        y = jnp.einsum("bn,bhnp->bhp", c_t, s)
+        return s, y
+
+    s0 = jnp.zeros((b, h, n, p), xh.dtype)
+    _, ys = jax.lax.scan(
+        step,
+        s0,
+        (
+            jnp.moveaxis(xh, 1, 0),
+            jnp.moveaxis(a_log.astype(xh.dtype), 1, 0),
+            jnp.moveaxis(bmat, 1, 0),
+            jnp.moveaxis(cmat, 1, 0),
+        ),
+    )
+    return jnp.moveaxis(ys, 0, 1)
+
+
+def _block_pre(p, x, cfg, conv_state=None):
+    """Shared pre-SSD computation: projections + conv + dt."""
+    ssm = cfg.ssm
+    dt_ = x.dtype
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    z = h @ p["w_z"].astype(dt_)
+    xc = h @ p["w_x"].astype(dt_)
+    xc, new_conv = _causal_conv(xc, p["conv_w"], p["conv_b"], conv_state)
+    bmat = h @ p["w_B"].astype(dt_)
+    cmat = h @ p["w_C"].astype(dt_)
+    dt = jax.nn.softplus(
+        (h @ p["w_dt"].astype(dt_)).astype(jnp.float32)
+        + p["dt_bias"][None, None, :]
+    )  # (B, L, H)
+    a_log = -jnp.exp(p["A_log"])[None, None, :] * dt  # <= 0
+    n_heads = xc.shape[-1] // ssm.head_dim
+    xh = xc.reshape(*xc.shape[:-1], n_heads, ssm.head_dim)
+    xh = xh * dt[..., None].astype(dt_)  # fold dt into input
+    return z, xh, a_log, bmat, cmat, new_conv
+
+
+def mamba2_block_apply(p, x, cfg):
+    """Training/prefill path. x (B, L, d) -> (y, (conv_state, ssd_state))."""
+    ssm = cfg.ssm
+    z, xh, a_log, bmat, cmat, conv_state = _block_pre(p, x, cfg)
+    y, s_final = _ssd_chunked(xh, a_log, bmat, cmat, ssm.chunk)
+    n_heads = xh.shape[-2]
+    d_x = xh.reshape(*x.shape[:2], -1)
+    y = y.reshape(*x.shape[:2], -1) + (
+        jnp.repeat(p["D"], ssm.head_dim)[None, None, :].astype(x.dtype) * d_x
+    )
+    y = rms_norm(y * jax.nn.silu(z), p["gn"], cfg.norm_eps)
+    out = y @ p["out_proj"].astype(x.dtype)
+    return x + out, (conv_state, s_final)
+
+
+def mamba2_block_decode(p, x, cfg, conv_state, ssd_state):
+    """One-token decode. x (B, 1, d); states carried explicitly."""
+    ssm = cfg.ssm
+    z, xh, a_log, bmat, cmat, new_conv = _block_pre(p, x, cfg, conv_state)
+    # single-step recurrence
+    a = jnp.exp(a_log[:, 0, :]).astype(x.dtype)  # (B, H)
+    s_new = ssd_state * a[:, :, None, None] + jnp.einsum(
+        "bn,bhp->bhnp", bmat[:, 0], xh[:, 0]
+    )
+    y = jnp.einsum("bn,bhnp->bhp", cmat[:, 0], s_new)[:, None]  # (B,1,H,P)
+    d_x = xh.reshape(*x.shape[:2], -1)
+    y = y.reshape(*x.shape[:2], -1) + (
+        jnp.repeat(p["D"], ssm.head_dim)[None, None, :].astype(x.dtype) * d_x
+    )
+    y = rms_norm(y * jax.nn.silu(z), p["gn"], cfg.norm_eps)
+    out = y @ p["out_proj"].astype(x.dtype)
+    return x + out, (new_conv, s_new)
+
+
+def init_conv_state(cfg, batch: int):
+    ssm = cfg.ssm
+    d_in = ssm.expand * cfg.d_model
+    return jnp.zeros((batch, ssm.d_conv - 1, d_in), cfg.activation_dtype)
+
+
+def init_ssd_state(cfg, batch: int):
+    ssm = cfg.ssm
+    d_in = ssm.expand * cfg.d_model
+    n_heads = d_in // ssm.head_dim
+    return jnp.zeros(
+        (batch, n_heads, ssm.d_state, ssm.head_dim), cfg.activation_dtype
+    )

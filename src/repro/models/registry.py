@@ -1,0 +1,24 @@
+"""Backbone registry: cfg.backbone -> module implementing the model API
+(init_params / forward / loss_fn / init_cache / prefill / decode_step)."""
+
+from __future__ import annotations
+
+from repro.models import transformer
+
+
+def get_backbone(cfg):
+    if cfg.backbone == "transformer":
+        return transformer
+    if cfg.backbone == "mamba2":
+        from repro.models import mamba2
+
+        return mamba2
+    if cfg.backbone == "zamba2":
+        from repro.models import zamba2
+
+        return zamba2
+    if cfg.backbone == "rwkv6":
+        from repro.models import rwkv6
+
+        return rwkv6
+    raise KeyError(f"unknown backbone {cfg.backbone!r}")

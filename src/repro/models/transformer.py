@@ -1,0 +1,335 @@
+"""Decoder-only transformer backbone covering the dense + MoE assigned
+architectures (musicgen, qwen3, gemma2, codeqwen, phi4, llava, kimi-k2,
+granite-moe).
+
+Layers are scanned: `cfg.layer_pattern` defines the per-scan-step block
+sequence (("global",) for uniform stacks, ("local","global") for Gemma-2,
+("moe",) for MoE stacks); parameters carry a leading (n_steps,) axis.
+MoE stacks may put `first_k_dense` unscanned dense layers in front
+(Kimi-K2 style).
+
+API (shared by every backbone module via models.registry):
+    init_params(key, cfg, mesh_ctx)        -> params pytree
+    forward(params, batch, cfg, mesh_ctx)  -> (logits, aux_loss)
+    loss_fn(params, batch, cfg, mesh_ctx)  -> scalar loss
+    init_cache(cfg, batch, max_len, ...)   -> cache pytree
+    prefill(params, batch, cfg, mesh_ctx)  -> (logits, cache)
+    decode_step(params, cache, cache_len, batch, cfg, mesh_ctx)
+                                           -> (logits, cache)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import attn_apply, attn_init, decode_attn_apply
+from repro.models.layers import (
+    cross_entropy_loss,
+    dense_init,
+    mlp_apply,
+    mlp_init,
+    rms_norm,
+    softcap,
+)
+from repro.models.moe import MeshContext, moe_apply, moe_init
+
+Params = Dict[str, Any]
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def _block_init(key, cfg, kind: str, mesh_ctx) -> Params:
+    ks = jax.random.split(key, 3)
+    d = cfg.d_model
+    p: Params = {
+        "ln1": jnp.zeros((d,), jnp.float32),
+        "attn": attn_init(
+            ks[0], d, cfg.n_heads, cfg.n_kv_heads,
+            cfg.resolved_head_dim, cfg.qk_norm,
+        ),
+        "ln2": jnp.zeros((d,), jnp.float32),
+    }
+    if cfg.post_norms:
+        p["ln1_post"] = jnp.zeros((d,), jnp.float32)
+        p["ln2_post"] = jnp.zeros((d,), jnp.float32)
+    if kind == "moe":
+        p["moe"] = moe_init(ks[1], cfg, mesh_ctx)
+    else:
+        p["mlp"] = mlp_init(ks[1], d, cfg.d_ff, cfg.mlp_act)
+    return p
+
+
+def _pattern_slots(cfg):
+    return [(f"slot{i}_{k}", k) for i, k in enumerate(cfg.layer_pattern)]
+
+
+def _n_steps(cfg) -> int:
+    first_dense = cfg.moe.first_k_dense if cfg.moe else 0
+    n = cfg.n_layers - first_dense
+    if n % len(cfg.layer_pattern):
+        raise ValueError(
+            f"{cfg.name}: {n} layers not divisible by pattern "
+            f"{cfg.layer_pattern}"
+        )
+    return n // len(cfg.layer_pattern)
+
+
+def init_params(key, cfg, mesh_ctx: Optional[MeshContext] = None) -> Params:
+    keys = jax.random.split(key, 8)
+    d, v = cfg.d_model, cfg.vocab_padded
+    params: Params = {
+        "embed": dense_init(keys[0], (v, d), fan_in=d),
+        "final_norm": jnp.zeros((d,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = dense_init(keys[1], (d, v))
+    first_dense = cfg.moe.first_k_dense if cfg.moe else 0
+    if first_dense:
+        dk = jax.random.split(keys[2], first_dense)
+        params["dense_prefix"] = [
+            _block_init(dk[i], cfg, "global", mesh_ctx)
+            for i in range(first_dense)
+        ]
+    n_steps = _n_steps(cfg)
+    layers: Params = {}
+    for i, (slot_name, kind) in enumerate(_pattern_slots(cfg)):
+        slot_keys = jax.random.split(jax.random.fold_in(keys[3], i), n_steps)
+        layers[slot_name] = jax.vmap(
+            lambda k: _block_init(k, cfg, kind, mesh_ctx)
+        )(slot_keys)
+    params["layers"] = layers
+    # Model params live in the activation dtype (bf16); optimizer masters
+    # are separate (training/optimizer.py), per DESIGN.md §6.
+    return jax.tree.map(lambda l: l.astype(cfg.activation_dtype), params)
+
+
+# --------------------------------------------------------------------------
+# forward / loss
+# --------------------------------------------------------------------------
+
+def _block_apply(p, x, cfg, kind, mesh_ctx):
+    window = cfg.sliding_window if kind == "local" else None
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    attn_out, kv = attn_apply(
+        p["attn"], h, cfg, window=window, mesh_ctx=mesh_ctx
+    )
+    if cfg.post_norms:
+        attn_out = rms_norm(attn_out, p["ln1_post"], cfg.norm_eps)
+    x = x + attn_out
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if kind == "moe":
+        ffn_out, aux = moe_apply(p["moe"], h, cfg, mesh_ctx)
+    else:
+        ffn_out = mlp_apply(p["mlp"], h, cfg.mlp_act)
+        aux = jnp.zeros((), jnp.float32)
+    if cfg.post_norms:
+        ffn_out = rms_norm(ffn_out, p["ln2_post"], cfg.norm_eps)
+    x = x + ffn_out
+    return x, aux, kv
+
+
+def _remat(fn, cfg):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+        )
+    return jax.checkpoint(fn)  # "full": save nothing
+
+
+def _embed_in(params, batch, cfg, mesh_ctx=None):
+    if cfg.frontend == "embedding":
+        x = batch["embeddings"].astype(cfg.activation_dtype)
+    else:
+        x = params["embed"].astype(cfg.activation_dtype)[batch["tokens"]]
+    if cfg.scale_embeddings:
+        x = x * jnp.asarray(
+            jnp.sqrt(cfg.d_model * 1.0), cfg.activation_dtype
+        )
+    if mesh_ctx is not None:
+        x = mesh_ctx.constrain_hidden(x)
+    return x
+
+
+def _head_out(params, x, cfg):
+    h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    w = (
+        params["embed"].T if cfg.tie_embeddings else params["head"]
+    ).astype(h.dtype)
+    return h @ w
+
+
+def forward(
+    params, batch, cfg, mesh_ctx: Optional[MeshContext] = None
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    x = _embed_in(params, batch, cfg, mesh_ctx)
+    aux_total = jnp.zeros((), jnp.float32)
+    for p in params.get("dense_prefix", []):
+        x, aux, _ = _block_apply(p, x, cfg, "global", mesh_ctx)
+        aux_total += aux
+    slots = _pattern_slots(cfg)
+
+    def body(carry, step_params):
+        x, aux_acc = carry
+        if mesh_ctx is not None:
+            x = mesh_ctx.constrain_hidden(x)
+        for slot_name, kind in slots:
+            x, aux, _ = _block_apply(
+                step_params[slot_name], x, cfg, kind, mesh_ctx
+            )
+            aux_acc = aux_acc + aux
+        return (x, aux_acc), None
+
+    (x, aux_total), _ = jax.lax.scan(
+        _remat(body, cfg), (x, aux_total), params["layers"]
+    )
+    return _head_out(params, x, cfg), aux_total
+
+
+def loss_fn(params, batch, cfg, mesh_ctx=None, aux_weight: float = 0.01):
+    logits, aux = forward(params, batch, cfg, mesh_ctx)
+    ce = cross_entropy_loss(logits, batch["labels"], cfg.final_softcap)
+    return ce + aux_weight * aux
+
+
+# --------------------------------------------------------------------------
+# serving: cache init / prefill / decode
+# --------------------------------------------------------------------------
+
+def _slot_cache_len(cfg, kind: str, max_len: int) -> int:
+    if kind == "local" and cfg.sliding_window:
+        return min(cfg.sliding_window, max_len)
+    return max_len
+
+
+def init_cache(cfg, batch: int, max_len: int,
+               mesh_ctx: Optional[MeshContext] = None) -> Params:
+    kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    dt = cfg.activation_dtype
+    n_steps = _n_steps(cfg)
+    cache: Params = {"layers": {}}
+    for slot_name, kind in _pattern_slots(cfg):
+        s = _slot_cache_len(cfg, kind, max_len)
+        cache["layers"][slot_name] = {
+            "k": jnp.zeros((n_steps, batch, s, kv, hd), dt),
+            "v": jnp.zeros((n_steps, batch, s, kv, hd), dt),
+        }
+    first_dense = cfg.moe.first_k_dense if cfg.moe else 0
+    if first_dense:
+        cache["dense_prefix"] = [
+            {
+                "k": jnp.zeros((batch, max_len, kv, hd), dt),
+                "v": jnp.zeros((batch, max_len, kv, hd), dt),
+            }
+            for _ in range(first_dense)
+        ]
+    return cache
+
+
+def _compress_kv(k, v, cfg, kind, max_len):
+    """Full-sequence (k, v) -> slot cache layout (ring for local slots)."""
+    s_slot = _slot_cache_len(cfg, kind, max_len)
+    s = k.shape[1]
+    if s_slot >= s:
+        pad = s_slot - s
+        if pad:
+            zk = jnp.zeros((k.shape[0], pad) + k.shape[2:], k.dtype)
+            k = jnp.concatenate([k, zk], axis=1)
+            v = jnp.concatenate([v, zk], axis=1)
+        return k, v
+    k = jnp.roll(k[:, s - s_slot :], s % s_slot, axis=1)
+    v = jnp.roll(v[:, s - s_slot :], s % s_slot, axis=1)
+    return k, v
+
+
+def prefill(params, batch, cfg, mesh_ctx=None, max_len: Optional[int] = None):
+    """Run the prompt, return (last-token logits, cache)."""
+    x = _embed_in(params, batch, cfg, mesh_ctx)
+    s = x.shape[1]
+    max_len = max_len or s
+    cache: Params = {"layers": {}}
+    dense_kvs = []
+    for p in params.get("dense_prefix", []):
+        x, _, kv = _block_apply(p, x, cfg, "global", mesh_ctx)
+        k, v = _compress_kv(kv[0], kv[1], cfg, "global", max_len)
+        dense_kvs.append({"k": k, "v": v})
+    if dense_kvs:
+        cache["dense_prefix"] = dense_kvs
+    slots = _pattern_slots(cfg)
+
+    def body(x, step_params):
+        if mesh_ctx is not None:
+            x = mesh_ctx.constrain_hidden(x)
+        kvs = {}
+        for slot_name, kind in slots:
+            x, _, kv = _block_apply(
+                step_params[slot_name], x, cfg, kind, mesh_ctx
+            )
+            k, v = _compress_kv(kv[0], kv[1], cfg, kind, max_len)
+            kvs[slot_name] = {"k": k, "v": v}
+        return x, kvs
+
+    x, layer_kvs = jax.lax.scan(body, x, params["layers"])
+    cache["layers"] = layer_kvs
+    logits = _head_out(params, x[:, -1:, :], cfg)
+    return softcap(logits[:, 0, :], cfg.final_softcap), cache
+
+
+def decode_step(params, cache, cache_len, batch, cfg, mesh_ctx=None):
+    """One token for the whole batch. batch: {"tokens": (B, 1)} or
+    {"embeddings": (B, 1, d)}. Returns (logits (B, V), new cache)."""
+    x = _embed_in(params, batch, cfg, mesh_ctx)
+
+    def apply_one(p, c, x, kind):
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        attn_out, k_c, v_c = decode_attn_apply(
+            p["attn"], h, cfg, c["k"], c["v"], cache_len,
+            ring=(kind == "local" and cfg.sliding_window is not None),
+        )
+        if cfg.post_norms:
+            attn_out = rms_norm(attn_out, p["ln1_post"], cfg.norm_eps)
+        x = x + attn_out
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        if kind == "moe":
+            ffn_out, _ = moe_apply(p["moe"], h, cfg, mesh_ctx)
+        else:
+            ffn_out = mlp_apply(p["mlp"], h, cfg.mlp_act)
+        if cfg.post_norms:
+            ffn_out = rms_norm(ffn_out, p["ln2_post"], cfg.norm_eps)
+        return x + ffn_out, {"k": k_c, "v": v_c}
+
+    new_cache: Params = {"layers": {}}
+    if "dense_prefix" in cache:
+        new_dense = []
+        for p, c in zip(params["dense_prefix"], cache["dense_prefix"]):
+            x, c_new = apply_one(p, c, x, "global")
+            new_dense.append(c_new)
+        new_cache["dense_prefix"] = new_dense
+    slots = _pattern_slots(cfg)
+
+    def body(x, inputs):
+        step_params, step_cache = inputs
+        if mesh_ctx is not None:
+            x = mesh_ctx.constrain_hidden(x)
+        kvs = {}
+        for slot_name, kind in slots:
+            x, c_new = apply_one(
+                step_params[slot_name], step_cache[slot_name], x, kind
+            )
+            kvs[slot_name] = c_new
+        return x, kvs
+
+    x, layer_kvs = jax.lax.scan(
+        body, x, (params["layers"], cache["layers"])
+    )
+    new_cache["layers"] = layer_kvs
+    logits = _head_out(params, x, cfg)
+    return softcap(logits[:, 0, :], cfg.final_softcap), new_cache

@@ -1,0 +1,259 @@
+"""Zamba2 hybrid backbone (arXiv:2411.15242): a deep Mamba2 stack with a
+small number of *shared* transformer blocks applied periodically.
+
+Layout here (assumptions recorded in DESIGN.md §Arch-applicability):
+  * cfg.n_layers Mamba2 layers (81 for zamba2-7b);
+  * before mamba layer i where i % shared_attn_every == 0, one of
+    n_shared_blocks (=2) shared attention+MLP blocks runs, alternating;
+  * the shared block consumes concat(hidden, initial embedding) (2d) —
+    Zamba's re-injection of the prompt embedding — projects attention
+    output back to d, then a standard d->d_ff MLP.
+Each *application* of a shared block has its own KV cache (distinct
+positions), even though parameters are shared.
+
+Scan structure: mamba layers are stacked (n_layers, ...) and consumed in
+per-group lax.scans (shared_attn_every layers per group) between shared-
+block applications, so HLO stays compact at 81 layers.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import attn_init, decode_attn_apply
+from repro.models.layers import (
+    cross_entropy_loss,
+    dense_init,
+    mlp_apply,
+    mlp_init,
+    rms_norm,
+)
+from repro.models import mamba2 as M2
+from repro.models.attention import attn_apply
+
+Params = Dict[str, Any]
+
+
+def _groups(cfg) -> List[Tuple[int, int]]:
+    """[(start, length)] mamba-layer groups between shared applications."""
+    k = cfg.shared_attn_every
+    out = []
+    i = 0
+    while i < cfg.n_layers:
+        out.append((i, min(k, cfg.n_layers - i)))
+        i += k
+    return out
+
+
+def n_shared_applications(cfg) -> int:
+    return len(_groups(cfg))
+
+
+def _shared_block_init(key, cfg) -> Params:
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    # attention consumes the 2d concat input via a fused input projection
+    return {
+        "ln1": jnp.zeros((2 * d,), jnp.float32),
+        "in_proj": dense_init(ks[0], (2 * d, d)),
+        "attn": attn_init(
+            ks[1], d, cfg.n_heads, cfg.n_kv_heads,
+            cfg.resolved_head_dim, cfg.qk_norm,
+        ),
+        "ln2": jnp.zeros((d,), jnp.float32),
+        "mlp": mlp_init(ks[2], d, cfg.d_ff, cfg.mlp_act),
+    }
+
+
+def init_params(key, cfg, mesh_ctx=None) -> Params:
+    keys = jax.random.split(key, 5)
+    d, v = cfg.d_model, cfg.vocab_padded
+    mamba_keys = jax.random.split(keys[1], cfg.n_layers)
+    shared_keys = jax.random.split(keys[2], cfg.n_shared_blocks)
+    params = {
+        "embed": dense_init(keys[0], (v, d), fan_in=d),
+        "head": dense_init(keys[3], (d, v)),
+        "final_norm": jnp.zeros((d,), jnp.float32),
+        "mamba": jax.vmap(lambda k: M2.mamba2_block_init(k, cfg))(
+            mamba_keys
+        ),
+        "shared": [
+            _shared_block_init(k, cfg) for k in shared_keys
+        ],
+    }
+    return jax.tree.map(lambda l: l.astype(cfg.activation_dtype), params)
+
+
+def _shared_apply(p, x, emb, cfg, cache=None, cache_len=None):
+    """One shared-block application. cache None -> training (returns kv);
+    else decode step against the provided cache."""
+    xin = jnp.concatenate([x, emb], axis=-1)
+    h = rms_norm(xin, p["ln1"], cfg.norm_eps) @ p["in_proj"].astype(x.dtype)
+    if cache is None:
+        attn_out, kv = attn_apply(p["attn"], h, cfg)
+        x = x + attn_out
+        h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + mlp_apply(p["mlp"], h2, cfg.mlp_act)
+        return x, kv
+    attn_out, k_c, v_c = decode_attn_apply(
+        p["attn"], h, cfg, cache["k"], cache["v"], cache_len
+    )
+    x = x + attn_out
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    x = x + mlp_apply(p["mlp"], h2, cfg.mlp_act)
+    return x, {"k": k_c, "v": v_c}
+
+
+def _slice_group(tree, start: int, length: int):
+    return jax.tree.map(lambda a: a[start : start + length], tree)
+
+
+def _remat(fn, cfg):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+        )
+    return jax.checkpoint(fn)
+
+
+def forward(params, batch, cfg, mesh_ctx=None):
+    x = params["embed"].astype(cfg.activation_dtype)[batch["tokens"]]
+    if mesh_ctx is not None:
+        x = mesh_ctx.constrain_hidden(x)
+    emb = x
+
+    def mamba_body(x, p):
+        if mesh_ctx is not None:
+            x = mesh_ctx.constrain_hidden(x)
+        x, _ = M2.mamba2_block_apply(p, x, cfg)
+        return x, None
+
+    body = _remat(mamba_body, cfg)
+    for gi, (start, length) in enumerate(_groups(cfg)):
+        p_shared = params["shared"][gi % cfg.n_shared_blocks]
+        x, _ = _shared_apply(p_shared, x, emb, cfg)
+        x, _ = jax.lax.scan(
+            body, x, _slice_group(params["mamba"], start, length)
+        )
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["head"].astype(x.dtype)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def loss_fn(params, batch, cfg, mesh_ctx=None):
+    logits, _ = forward(params, batch, cfg, mesh_ctx)
+    return cross_entropy_loss(logits, batch["labels"], cfg.final_softcap)
+
+
+def init_cache(cfg, batch: int, max_len: int, mesh_ctx=None):
+    n_apps = n_shared_applications(cfg)
+    kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    dt = cfg.activation_dtype
+    return {
+        "shared_kv": {
+            "k": jnp.zeros((n_apps, batch, max_len, kv, hd), dt),
+            "v": jnp.zeros((n_apps, batch, max_len, kv, hd), dt),
+        },
+        "conv": jnp.zeros(
+            (cfg.n_layers, batch, cfg.ssm.d_conv - 1,
+             cfg.ssm.expand * cfg.d_model), dt
+        ),
+        "ssd": jnp.zeros(
+            (cfg.n_layers, batch,
+             cfg.ssm.expand * cfg.d_model // cfg.ssm.head_dim,
+             cfg.ssm.d_state, cfg.ssm.head_dim), dt
+        ),
+        # the prompt's first-token embedding is re-injected at every
+        # shared block; for decode we carry the *current* token embedding
+        # (training concatenates per-position embeddings)
+    }
+
+
+def prefill(params, batch, cfg, mesh_ctx=None, max_len=None):
+    x = params["embed"].astype(cfg.activation_dtype)[batch["tokens"]]
+    if mesh_ctx is not None:
+        x = mesh_ctx.constrain_hidden(x)
+    emb = x
+    s = x.shape[1]
+    max_len = max_len or s
+    b = x.shape[0]
+    cache = init_cache(cfg, b, max_len, mesh_ctx)
+    shared_k, shared_v = [], []
+
+    def mamba_body(x, p):
+        x, (conv_s, ssd_s) = M2.mamba2_block_apply(p, x, cfg)
+        return x, (conv_s, ssd_s)
+
+    convs, ssds = [], []
+    for gi, (start, length) in enumerate(_groups(cfg)):
+        p_shared = params["shared"][gi % cfg.n_shared_blocks]
+        x, (k, v) = _shared_apply(p_shared, x, emb, cfg)
+        pad = max_len - k.shape[1]
+        if pad > 0:
+            zk = jnp.zeros((b, pad) + k.shape[2:], k.dtype)
+            k = jnp.concatenate([k, zk], 1)
+            v = jnp.concatenate([v, zk], 1)
+        shared_k.append(k)
+        shared_v.append(v)
+        x, (conv_s, ssd_s) = jax.lax.scan(
+            mamba_body, x, _slice_group(params["mamba"], start, length)
+        )
+        convs.append(conv_s)
+        ssds.append(ssd_s)
+    cache["shared_kv"]["k"] = jnp.stack(shared_k)
+    cache["shared_kv"]["v"] = jnp.stack(shared_v)
+    cache["conv"] = jnp.concatenate(convs, axis=0)
+    cache["ssd"] = jnp.concatenate(ssds, axis=0)
+    h = rms_norm(x[:, -1:, :], params["final_norm"], cfg.norm_eps)
+    logits = (h @ params["head"].astype(h.dtype))[:, 0, :]
+    return logits, cache
+
+
+def decode_step(params, cache, cache_len, batch, cfg, mesh_ctx=None):
+    x = params["embed"].astype(cfg.activation_dtype)[batch["tokens"]]
+    if mesh_ctx is not None:
+        x = mesh_ctx.constrain_hidden(x)
+    emb = x
+
+    def mamba_body(x, inputs):
+        p, conv_s, ssd_s = inputs
+        x, (conv_new, ssd_new) = M2.mamba2_block_decode(
+            p, x, cfg, conv_s, ssd_s
+        )
+        return x, (conv_new, ssd_new)
+
+    new_sk, new_sv, new_conv, new_ssd = [], [], [], []
+    for gi, (start, length) in enumerate(_groups(cfg)):
+        p_shared = params["shared"][gi % cfg.n_shared_blocks]
+        c = {
+            "k": cache["shared_kv"]["k"][gi],
+            "v": cache["shared_kv"]["v"][gi],
+        }
+        x, c_new = _shared_apply(p_shared, x, emb, cfg, c, cache_len)
+        new_sk.append(c_new["k"])
+        new_sv.append(c_new["v"])
+        x, (conv_new, ssd_new) = jax.lax.scan(
+            mamba_body,
+            x,
+            (
+                _slice_group(params["mamba"], start, length),
+                cache["conv"][start : start + length],
+                cache["ssd"][start : start + length],
+            ),
+        )
+        new_conv.append(conv_new)
+        new_ssd.append(ssd_new)
+    new_cache = {
+        "shared_kv": {"k": jnp.stack(new_sk), "v": jnp.stack(new_sv)},
+        "conv": jnp.concatenate(new_conv, axis=0),
+        "ssd": jnp.concatenate(new_ssd, axis=0),
+    }
+    h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (h @ params["head"].astype(h.dtype))[:, 0, :]
+    return logits, new_cache

@@ -1,0 +1,211 @@
+"""Serving paths.
+
+LM side: `lower_prefill` / `lower_decode_step` build the pjit'd serving
+programs the dry-run compiles (batch of requests, KV cache / recurrent
+state sharded per distributed/sharding.py).
+
+KWS side: `StreamingKWSServer` — the deployment shape of the paper's
+chip: N concurrent audio streams, one 16 ms FV per stream per frame, a
+batched weights-resident GRU step, per-stream argmax + exponential score
+smoothing. This is the serve-side example driver (examples/
+serve_streaming.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import (
+    ShardingRules,
+    batch_specs,
+    cache_specs,
+    make_mesh_context,
+    named,
+    param_specs,
+)
+from repro.models.registry import get_backbone
+
+Pytree = Any
+
+
+def serve_batch_shape(arch_cfg, shape_spec):
+    """ShapeDtypeStructs for one serve step of the given input shape."""
+    b = shape_spec.global_batch
+    if arch_cfg.frontend == "embedding":
+        return {
+            "embeddings": jax.ShapeDtypeStruct(
+                (b, 1, arch_cfg.d_model), arch_cfg.activation_dtype
+            )
+        }
+    return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+
+
+def prefill_batch_shape(arch_cfg, shape_spec):
+    b, s = shape_spec.global_batch, shape_spec.seq_len
+    if arch_cfg.frontend == "embedding":
+        return {
+            "embeddings": jax.ShapeDtypeStruct(
+                (b, s, arch_cfg.d_model), arch_cfg.activation_dtype
+            )
+        }
+    return {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+
+
+def lower_decode_step(arch_cfg, rules: ShardingRules, shape_spec):
+    """Abstract lower of one decode step at (batch, cache_len) scale."""
+    backbone = get_backbone(arch_cfg)
+    mesh_ctx = make_mesh_context(rules)
+    b, s = shape_spec.global_batch, shape_spec.seq_len
+    params_shape = jax.eval_shape(
+        lambda k: backbone.init_params(k, arch_cfg, mesh_ctx),
+        jax.random.PRNGKey(0),
+    )
+    if getattr(arch_cfg, "serve_quant", False):
+        from repro.serving.quantize import quantize_expert_shapes
+
+        params_shape = quantize_expert_shapes(params_shape)
+    cache_shape = jax.eval_shape(
+        lambda: backbone.init_cache(arch_cfg, b, s, mesh_ctx)
+    )
+    batch_shape = serve_batch_shape(arch_cfg, shape_spec)
+    pspecs = param_specs(params_shape, rules)
+    cspecs = cache_specs(cache_shape, rules, b)
+    bspecs = batch_specs(batch_shape, rules)
+
+    def step(params, cache, cache_len, batch):
+        return backbone.decode_step(
+            params, cache, cache_len, batch, arch_cfg, mesh_ctx
+        )
+
+    # the updated cache keeps the input cache's sharding (donated buffers)
+    out_cache_shape = jax.eval_shape(
+        step,
+        params_shape,
+        cache_shape,
+        jax.ShapeDtypeStruct((), jnp.int32),
+        batch_shape,
+    )[1]
+    out_cspecs = cache_specs(out_cache_shape, rules, b)
+    with rules.mesh:
+        lowered = jax.jit(
+            step,
+            in_shardings=(
+                named(pspecs, rules.mesh),
+                named(cspecs, rules.mesh),
+                None,
+                named(bspecs, rules.mesh),
+            ),
+            out_shardings=(None, named(out_cspecs, rules.mesh)),
+            donate_argnums=(1,),
+        ).lower(
+            params_shape,
+            cache_shape,
+            jax.ShapeDtypeStruct((), jnp.int32),
+            batch_shape,
+        )
+    return lowered, params_shape, cache_shape
+
+
+def lower_prefill(arch_cfg, rules: ShardingRules, shape_spec):
+    backbone = get_backbone(arch_cfg)
+    mesh_ctx = make_mesh_context(rules)
+    b, s = shape_spec.global_batch, shape_spec.seq_len
+    params_shape = jax.eval_shape(
+        lambda k: backbone.init_params(k, arch_cfg, mesh_ctx),
+        jax.random.PRNGKey(0),
+    )
+    batch_shape = prefill_batch_shape(arch_cfg, shape_spec)
+    pspecs = param_specs(params_shape, rules)
+    bspecs = batch_specs(batch_shape, rules)
+
+    def step(params, batch):
+        return backbone.prefill(params, batch, arch_cfg, mesh_ctx)
+
+    out_cache_shape = jax.eval_shape(step, params_shape, batch_shape)[1]
+    out_cspecs = cache_specs(out_cache_shape, rules, b)
+    with rules.mesh:
+        lowered = jax.jit(
+            step,
+            in_shardings=(
+                named(pspecs, rules.mesh),
+                named(bspecs, rules.mesh),
+            ),
+            out_shardings=(None, named(out_cspecs, rules.mesh)),
+        ).lower(params_shape, batch_shape)
+    return lowered, params_shape
+
+
+# --------------------------------------------------------------------------
+# Streaming KWS serving (the paper's own deployment shape)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class StreamState:
+    stream_id: int
+    scores: Optional[np.ndarray] = None  # smoothed class scores
+
+
+class StreamingKWSServer:
+    """Batched frame-synchronous KWS over N concurrent audio streams.
+
+    Each frame tick: callers push one FV_Norm (C,) per active stream; the
+    server runs ONE batched GRU step for all of them (the accelerator's
+    Fig. 4 timing, vectorized across streams) and returns per-stream
+    smoothed posteriors + argmax.
+    """
+
+    def __init__(self, pipeline, params, max_streams: int = 256,
+                 smoothing: float = 0.7):
+        self.pipeline = pipeline
+        self.params = params
+        self.max_streams = max_streams
+        self.smoothing = smoothing
+        self.states = pipeline.streaming_init(max_streams)
+        self.active: Dict[int, int] = {}  # stream_id -> slot
+        self.scores = np.zeros(
+            (max_streams, pipeline.config.gru.num_classes), np.float32
+        )
+        self._free = list(range(max_streams))[::-1]
+
+    def open_stream(self, stream_id: int):
+        if not self._free:
+            raise RuntimeError("server at capacity")
+        slot = self._free.pop()
+        self.active[stream_id] = slot
+        for i, h in enumerate(self.states):
+            self.states[i] = h.at[slot].set(0.0)
+        self.scores[slot] = 0.0
+
+    def close_stream(self, stream_id: int):
+        slot = self.active.pop(stream_id)
+        self._free.append(slot)
+
+    def step(self, frames: Dict[int, np.ndarray]) -> Dict[int, dict]:
+        """frames: stream_id -> FV_Norm (C,). One 16 ms tick."""
+        c = self.pipeline.config.fex.num_channels
+        fv = np.zeros((self.max_streams, c), np.float32)
+        for sid, frame in frames.items():
+            fv[self.active[sid]] = frame
+        self.states, logits = self.pipeline.streaming_step(
+            self.params, self.states, jnp.asarray(fv)
+        )
+        logits = np.asarray(logits)
+        out = {}
+        for sid in frames:
+            slot = self.active[sid]
+            p = np.exp(logits[slot] - logits[slot].max())
+            p /= p.sum()
+            self.scores[slot] = (
+                self.smoothing * self.scores[slot]
+                + (1 - self.smoothing) * p
+            )
+            out[sid] = {
+                "probs": self.scores[slot].copy(),
+                "top": int(self.scores[slot].argmax()),
+            }
+        return out

@@ -1,0 +1,191 @@
+"""Optimizers, pure JAX (no optax): AdamW with optional int8-quantized
+moments, plus the paper's training schedule pieces.
+
+The paper trains its GRU with AdamW (lr 1e-3, wd 0.01) and
+ReduceLROnPlateau (factor 0.8, patience 3, min lr 5e-4) — Section III-F.
+Both are implemented here and used by the KWS examples; the LM train
+steps use AdamW + cosine.
+
+int8 moments (`state_dtype="int8"`): blockwise absmax quantization
+(block 128 on the flattened tensor) — the distributed-optimization trick
+that lets the 1T MoE's optimizer state fit v5e-512 (DESIGN.md §6), and
+the framework-level echo of the paper's 8-bit weight memory.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+_BLOCK = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    state_dtype: str = "float32"  # float32 | int8
+
+
+# ---------- int8 row-wise moment quantization ----------
+# Quantized moments keep the PARAM's shape (int8) with one fp32 absmax
+# scale per last-dim row, so they shard with exactly the param's
+# PartitionSpec — no resharding traffic in the update step. Small leaves
+# (norm scales, biases) stay fp32.
+#
+# The second moment v is quantized in SQRT space (unsigned): linear
+# absmax int8 on v zeroes small coordinates and 1/sqrt(v_hat) then
+# explodes (measured: diverges on a quadratic). sqrt-space bounds the
+# *denominator* error by max(sqrt(v))/255 — small coordinates understep
+# instead of exploding (same reason bitsandbytes uses a nonlinear map).
+
+_INT8_MIN_SIZE = 4096
+
+
+def _use_int8(p) -> bool:
+    return p.ndim >= 2 and p.size >= _INT8_MIN_SIZE
+
+
+def _quant_rowwise(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Signed absmax int8 per last-dim row (first moment)."""
+    scale = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _dequant_rowwise(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def _quant_sqrt_rowwise(v: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Unsigned sqrt-space uint8-in-int8 for the second moment."""
+    r = jnp.sqrt(jnp.maximum(v, 0.0))
+    scale = jnp.max(r, axis=-1, keepdims=True) / 254.0 + 1e-20
+    q = jnp.clip(jnp.round(r / scale) - 127, -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _dequant_sqrt_rowwise(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    r = (q.astype(jnp.float32) + 127.0) * scale
+    return r * r
+
+
+def init_opt_state(params: Pytree, cfg: AdamWConfig) -> Pytree:
+    def zeros_like_moment(p):
+        if cfg.state_dtype == "int8" and _use_int8(p):
+            return {
+                "q": jnp.zeros(p.shape, jnp.int8),
+                "s": jnp.zeros(p.shape[:-1] + (1,), jnp.float32),
+            }
+        return jnp.zeros(p.shape, jnp.float32)
+
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(zeros_like_moment, params),
+        "v": jax.tree.map(zeros_like_moment, params),
+    }
+
+
+def global_norm(tree: Pytree) -> jnp.ndarray:
+    return jnp.sqrt(
+        sum(
+            jnp.sum(jnp.square(l.astype(jnp.float32)))
+            for l in jax.tree.leaves(tree)
+        )
+    )
+
+
+def adamw_update(
+    params: Pytree,
+    grads: Pytree,
+    state: Pytree,
+    cfg: AdamWConfig,
+    lr: Optional[jnp.ndarray] = None,
+) -> Tuple[Pytree, Pytree, dict]:
+    """One AdamW step. Params may be bf16 (updated in fp32, cast back);
+    moments fp32 or int8-blockwise. Returns (params, state, metrics)."""
+    lr = cfg.lr if lr is None else lr
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+
+    bc1 = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def update_leaf(p, g, m, v):
+        g32 = g.astype(jnp.float32) * clip
+        quantized = isinstance(m, dict)
+        if quantized:
+            m32 = _dequant_rowwise(m["q"], m["s"])
+            v32 = _dequant_sqrt_rowwise(v["q"], v["s"])
+        else:
+            m32, v32 = m, v
+        m32 = cfg.b1 * m32 + (1 - cfg.b1) * g32
+        v32 = cfg.b2 * v32 + (1 - cfg.b2) * g32 * g32
+        mhat = m32 / bc1
+        vhat = v32 / bc2
+        p32 = p.astype(jnp.float32)
+        upd = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p32
+        p_new = (p32 - lr * upd).astype(p.dtype)
+        if quantized:
+            mq, ms = _quant_rowwise(m32)
+            vq, vs = _quant_sqrt_rowwise(v32)
+            return p_new, {"q": mq, "s": ms}, {"q": vq, "s": vs}
+        return p_new, m32, v32
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [update_leaf(*args) for args in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    new_state = {"step": step, "m": new_m, "v": new_v}
+    return new_p, new_state, {"grad_norm": gnorm}
+
+
+# ---------- schedules ----------
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * jnp.minimum(step / max(warmup, 1), 1.0)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = 0.5 * base_lr * (1.0 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr
+
+
+class ReduceLROnPlateau:
+    """Host-side scheduler matching the paper's training recipe
+    (factor 0.8, patience 3 epochs, floor 5e-4)."""
+
+    def __init__(self, lr: float = 1e-3, factor: float = 0.8,
+                 patience: int = 3, min_lr: float = 5e-4):
+        self.lr = lr
+        self.factor = factor
+        self.patience = patience
+        self.min_lr = min_lr
+        self.best = float("inf")
+        self.bad_epochs = 0
+
+    def step(self, metric: float) -> float:
+        if metric < self.best - 1e-6:
+            self.best = metric
+            self.bad_epochs = 0
+        else:
+            self.bad_epochs += 1
+            if self.bad_epochs > self.patience:
+                self.lr = max(self.lr * self.factor, self.min_lr)
+                self.bad_epochs = 0
+        return self.lr

@@ -1,0 +1,151 @@
+"""Train-step builders: full update step (fwd + bwd + AdamW) as a single
+pjit'd program — what the dry-run lowers and what a real run executes.
+
+Features: global-norm clipping, gradient accumulation (microbatching via
+lax.scan), donated params/opt-state buffers, schedule-driven lr, and the
+sharding rules of distributed/sharding.py applied to params, moments,
+and batch alike.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import (
+    ShardingRules,
+    batch_specs,
+    make_mesh_context,
+    named,
+    param_specs,
+)
+from repro.models.registry import get_backbone
+from repro.training.optimizer import AdamWConfig, adamw_update, init_opt_state
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: AdamWConfig = dataclasses.field(default_factory=AdamWConfig)
+    microbatch: int = 1  # gradient-accumulation steps per update
+    lr_schedule: Optional[Callable] = None  # step -> lr
+
+
+def _opt_state_specs(opt_state_shape, pspecs):
+    """Moments mirror param sharding exactly (int8 q keeps the param's
+    shape; its row scale drops the last-dim sharding entry)."""
+    from jax.sharding import PartitionSpec as P
+
+    def mirror(spec_tree, state_tree):
+        def leaf_map(spec, st):
+            if isinstance(st, dict) and "q" in st:
+                dims = list(spec) if spec else []
+                sdims = dims[:-1] + [None] if dims else []
+                return {"q": spec, "s": P(*sdims)}
+            return spec
+
+        return jax.tree.map(
+            leaf_map, spec_tree, state_tree,
+            is_leaf=lambda x: isinstance(x, dict) and "q" in x,
+        )
+
+    return {
+        "step": P(),
+        "m": mirror(pspecs, opt_state_shape["m"]),
+        "v": mirror(pspecs, opt_state_shape["v"]),
+    }
+
+
+def build_train_step(
+    arch_cfg,
+    rules: ShardingRules,
+    train_cfg: TrainConfig = TrainConfig(),
+):
+    """Returns (train_step, param_shardings_fn). train_step(params,
+    opt_state, batch, step) -> (params, opt_state, metrics)."""
+    backbone = get_backbone(arch_cfg)
+    mesh_ctx = make_mesh_context(rules)
+
+    def loss(params, batch):
+        return backbone.loss_fn(params, batch, arch_cfg, mesh_ctx)
+
+    def train_step(params, opt_state, batch):
+        if train_cfg.microbatch > 1:
+            mb = train_cfg.microbatch
+
+            def micro(g_acc, mb_batch):
+                l, g = jax.value_and_grad(loss)(params, mb_batch)
+                return jax.tree.map(jnp.add, g_acc, g), l
+
+            def split(leaf):
+                b = leaf.shape[0]
+                return leaf.reshape(mb, b // mb, *leaf.shape[1:])
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            g_sum, losses = jax.lax.scan(
+                micro, g0, jax.tree.map(split, batch)
+            )
+            grads = jax.tree.map(lambda g: g / mb, g_sum)
+            l = losses.mean()
+        else:
+            l, grads = jax.value_and_grad(loss)(params, batch)
+        lr = None
+        if train_cfg.lr_schedule is not None:
+            lr = train_cfg.lr_schedule(opt_state["step"])
+        params, opt_state, metrics = adamw_update(
+            params, grads, opt_state, train_cfg.optimizer, lr
+        )
+        metrics["loss"] = l
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def lower_train_step(
+    arch_cfg,
+    rules: ShardingRules,
+    batch_shape,
+    train_cfg: TrainConfig = TrainConfig(),
+):
+    """Abstract lower+compile of the full update step (dry-run entry).
+
+    Never allocates: params/opt-state come from eval_shape.
+    """
+    backbone = get_backbone(arch_cfg)
+    mesh_ctx = make_mesh_context(rules)
+    params_shape = jax.eval_shape(
+        lambda k: backbone.init_params(k, arch_cfg, mesh_ctx),
+        jax.random.PRNGKey(0),
+    )
+    opt_shape = jax.eval_shape(
+        lambda p: init_opt_state(p, train_cfg.optimizer), params_shape
+    )
+    pspecs = param_specs(params_shape, rules)
+    ospecs = _opt_state_specs(opt_shape, pspecs)
+    bspecs = batch_specs(batch_shape, rules)
+    step_fn = build_train_step(arch_cfg, rules, train_cfg)
+    with rules.mesh:
+        lowered = jax.jit(
+            step_fn,
+            in_shardings=(
+                named(pspecs, rules.mesh),
+                named(ospecs, rules.mesh),
+                named(bspecs, rules.mesh),
+            ),
+            # outputs mirror inputs (donation reuses the buffers); metrics
+            # replicate
+            out_shardings=(
+                named(pspecs, rules.mesh),
+                named(ospecs, rules.mesh),
+                None,
+            ),
+            donate_argnums=(0, 1),
+        ).lower(params_shape, opt_shape, batch_shape)
+    return lowered, params_shape, opt_shape

@@ -1,0 +1,8 @@
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# NOTE: no XLA_FLAGS here on purpose — tests run on the single real CPU
+# device; only launch/dryrun.py (and subprocess tests) use 512 fake
+# devices.

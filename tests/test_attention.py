@@ -1,0 +1,104 @@
+"""Attention variants: GQA grouping, windows, softcap, flash chunking."""
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models.attention import (
+    _mask,
+    _sdpa,
+    _sdpa_grouped,
+    attn_apply,
+    attn_init,
+)
+
+RNG = np.random.default_rng(0)
+
+
+def _qkv(b=2, s=32, h=8, kv=2, d=16):
+    q = jnp.asarray(RNG.standard_normal((b, s, h, d)).astype(np.float32))
+    k = jnp.asarray(RNG.standard_normal((b, s, kv, d)).astype(np.float32))
+    v = jnp.asarray(RNG.standard_normal((b, s, kv, d)).astype(np.float32))
+    return q, k, v
+
+
+def _ref_attention(q, k, v, mask, scale, cap=None):
+    """Dense reference with explicit per-head group expansion."""
+    b, s, h, d = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    out = np.zeros((b, s, h, d), np.float32)
+    qn, kn, vn = map(np.asarray, (q, k, v))
+    mk = np.asarray(mask)
+    for hh in range(h):
+        kk = kn[:, :, hh // g]
+        vv = vn[:, :, hh // g]
+        sc = np.einsum("bsd,btd->bst", qn[:, :, hh], kk) * scale
+        if cap:
+            sc = cap * np.tanh(sc / cap)
+        sc = np.where(mk if mk.ndim == 3 else mk[None], sc, -1e30)
+        w = np.exp(sc - sc.max(-1, keepdims=True))
+        w = w / w.sum(-1, keepdims=True)
+        out[:, :, hh] = np.einsum("bst,btd->bsd", w, vv)
+    return out
+
+
+@pytest.mark.parametrize("cap", [None, 30.0])
+def test_sdpa_matches_reference(cap):
+    q, k, v = _qkv()
+    s = q.shape[1]
+    mask = _mask(jnp.arange(s), jnp.arange(s), True, None, None)
+    out = _sdpa(q, k, v, mask, 0.25, cap, None)
+    ref = _ref_attention(q, k, v, mask, 0.25, cap)
+    np.testing.assert_allclose(np.asarray(out), ref, atol=2e-5)
+
+
+def test_flash_chunking_matches_vanilla():
+    q, k, v = _qkv(s=64)
+    mask = _mask(jnp.arange(64), jnp.arange(64), True, None, None)
+    full = _sdpa(q, k, v, mask, 0.25, None, None)
+    chunked = _sdpa(q, k, v, mask, 0.25, None, 16)
+    np.testing.assert_allclose(
+        np.asarray(full), np.asarray(chunked), atol=3e-5
+    )
+
+
+def test_sliding_window_mask():
+    m = np.asarray(_mask(jnp.arange(8), jnp.arange(8), True, 3, None))
+    # position 5 attends 3, 4, 5 only
+    assert list(np.where(m[5])[0]) == [3, 4, 5]
+
+
+def test_grouped_decode_matches_repeat_path():
+    b, h, kv, d, s_cache = 2, 8, 2, 16, 24
+    q = jnp.asarray(RNG.standard_normal((b, 1, h, d)).astype(np.float32))
+    k = jnp.asarray(RNG.standard_normal((b, s_cache, kv, d)).astype(np.float32))
+    v = jnp.asarray(RNG.standard_normal((b, s_cache, kv, d)).astype(np.float32))
+    mask2 = jnp.ones((b, 1, s_cache), bool)
+    out_g = _sdpa_grouped(q, k, v, mask2, 0.25, None)
+    mask3 = jnp.ones((1, s_cache), bool)
+    out_r = _sdpa(q, k, v, mask3, 0.25, None, None)
+    np.testing.assert_allclose(
+        np.asarray(out_g), np.asarray(out_r), atol=2e-5
+    )
+
+
+def test_qk_norm_changes_scores_boundedly():
+    cfg = dataclasses.replace(
+        get_config("qwen3-4b").reduced(), dtype="float32"
+    )
+    p = attn_init(jax.random.PRNGKey(0), cfg.d_model, cfg.n_heads,
+                  cfg.n_kv_heads, cfg.resolved_head_dim, qk_norm=True)
+    x = jnp.asarray(
+        RNG.standard_normal((2, 8, cfg.d_model)).astype(np.float32)
+    )
+    out, (k, _) = attn_apply(p, x, cfg)
+    assert bool(jnp.isfinite(out).all())
+    # qk-norm bounds per-head key norms to ~sqrt(d)
+    norms = jnp.linalg.norm(k, axis=-1)
+    assert float(norms.max()) < 3 * math.sqrt(cfg.resolved_head_dim)

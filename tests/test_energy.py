@@ -1,0 +1,35 @@
+"""Energy/latency model vs the paper's published numbers (Table II)."""
+
+from repro.core.energy import paper_accelerator, paper_power_model
+from repro.core.gru import GRUConfig
+
+
+def test_latency_matches_table2():
+    acc = paper_accelerator()
+    lat_ms = acc.latency_s(GRUConfig()) * 1e3
+    assert abs(lat_ms - 12.4) < 0.1  # paper: 12.4 ms
+
+
+def test_latency_fits_frame_budget():
+    acc = paper_accelerator()
+    assert acc.utilization(GRUConfig()) < 1.0  # finishes within 16 ms
+
+
+def test_accelerator_power_matches():
+    pm = paper_power_model()
+    p = pm.accelerator_power_w(GRUConfig()) * 1e6
+    assert abs(p - 9.96) < 0.15  # paper: 9.96 uW
+
+
+def test_total_power_matches():
+    pm = paper_power_model()
+    total = pm.total_power_w(GRUConfig()) * 1e6
+    assert abs(total - 23.0) < 0.2  # paper: 23 uW
+
+
+def test_model_extrapolates_bigger_network():
+    """The 94.2%-accuracy GRU of [36] is ~21x our size; the model must
+    predict super-linear power growth (Section IV's argument)."""
+    pm = paper_power_model()
+    big = GRUConfig(hidden_dim=48 * 5, num_layers=3)
+    assert pm.accelerator_power_w(big) > 5 * pm.accelerator_power_w(GRUConfig())

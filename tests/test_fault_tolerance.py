@@ -1,0 +1,57 @@
+"""Fault-tolerance control flow: stragglers, elastic shrink, manager."""
+
+import pytest
+
+from repro.distributed.fault_tolerance import (
+    CheckpointManager,
+    CheckpointPolicy,
+    ElasticMeshManager,
+    StragglerMonitor,
+)
+
+
+def test_straggler_detection_and_budget():
+    mon = StragglerMonitor(threshold=2.0, budget=3)
+    for step in range(10):
+        assert not mon.record(step, 1.0)
+    # three consecutive slow steps exhaust the budget
+    assert not mon.record(10, 5.0)
+    assert not mon.record(11, 5.0)
+    assert mon.record(12, 5.0)
+    assert len(mon.events) == 3
+
+
+def test_straggler_ema_not_poisoned():
+    mon = StragglerMonitor(threshold=2.0, budget=100)
+    for step in range(5):
+        mon.record(step, 1.0)
+    ema_before = mon.ema
+    mon.record(5, 50.0)  # one straggler
+    assert mon.ema == ema_before  # slow steps don't move the baseline
+
+
+def test_elastic_shrink_power_of_two():
+    made = []
+    mgr = ElasticMeshManager(lambda n: made.append(n) or n, 16)
+    mgr.shrink(1)  # 15 -> rounds down to 8
+    assert mgr.data_size == 8
+    mgr.shrink(3)  # 5 -> 4
+    assert mgr.data_size == 4
+    mgr.shrink(3)  # 1
+    assert mgr.data_size == 1
+    with pytest.raises(RuntimeError):
+        mgr.shrink(1)
+    assert made == [8, 4, 1]
+
+
+def test_checkpoint_manager_periodic(tmp_path):
+    import jax.numpy as jnp
+
+    mgr = CheckpointManager(
+        CheckpointPolicy(str(tmp_path), every_steps=10, async_save=False)
+    )
+    tree = {"w": jnp.arange(4.0)}
+    for step in range(1, 31):
+        mgr.maybe_save(step, tree)
+    restored, step = mgr.restore_latest(tree)
+    assert step == 30

@@ -1,0 +1,122 @@
+"""Software-model FEx: shapes, stage invariants (hypothesis), ablation."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import quant
+from repro.core.fex import (
+    FExConfig,
+    FExNormStats,
+    biquad_filterbank,
+    fex_forward,
+    fex_frames,
+    fit_norm_stats,
+    frame_average,
+    full_wave_rectify,
+    oversample2x,
+)
+
+CFG = FExConfig()
+
+
+def test_frame_math():
+    assert CFG.fs_internal == 32000.0
+    assert CFG.frame_len == 512  # 16 ms @ 32 kHz
+
+
+def test_oversample2x_shape_and_interp():
+    x = jnp.asarray([[0.0, 1.0, 0.0, -1.0]])
+    y = oversample2x(x)
+    assert y.shape == (1, 8)
+    np.testing.assert_allclose(y[0, :4], [0.0, 0.5, 1.0, 0.5], atol=1e-6)
+
+
+def test_fex_frames_shape():
+    audio = jnp.zeros((3, 16000))
+    fr = fex_frames(audio, CFG)
+    assert fr.shape == (3, 62, 16)  # 1 s -> 62 full 16 ms frames
+
+
+def test_sine_selects_matching_channel():
+    coeffs = CFG.filterbank()
+    f0 = np.asarray(coeffs.f0)
+    t = np.arange(16000) / 16000.0
+    audio = jnp.asarray(0.2 * np.sin(2 * np.pi * f0[5] * t), jnp.float32)
+    fr = np.asarray(fex_frames(audio[None], CFG))[0, 10:]  # settled
+    assert fr.mean(0).argmax() == 5
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**32 - 1))
+def test_rectified_frames_nonnegative(seed):
+    rng = np.random.default_rng(seed)
+    audio = jnp.asarray(
+        rng.standard_normal((1, 2048)).astype(np.float32) * 0.3
+    )
+    fr = fex_frames(audio, CFG)
+    assert bool((fr >= 0).all())
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.floats(0.01, 0.5))
+def test_frame_average_bounded_by_peak(amp):
+    audio = jnp.full((1, 2048), float(amp), jnp.float32)
+    y = biquad_filterbank(oversample2x(audio), CFG.filterbank())
+    fr = frame_average(full_wave_rectify(y), CFG.frame_len)
+    assert float(fr.max()) <= float(jnp.abs(y).max()) + 1e-6
+
+
+def test_quantizer_monotone_and_range():
+    x = jnp.linspace(0, 1.0, 100)
+    q = quant.quantize_unsigned(x, 12, 0.7)
+    assert bool((jnp.diff(q) >= 0).all())
+    assert float(q.min()) == 0.0 and float(q.max()) == 4095.0
+
+
+def test_log_compress_monotone_10bit():
+    codes = jnp.arange(4096.0)
+    out = quant.log_compress_lut(codes, 12, 10)
+    assert bool((jnp.diff(out) >= 0).all())
+    assert float(out.min()) == 0.0 and float(out.max()) == 1023.0
+    lut = quant.make_log_lut(12, 10)
+    np.testing.assert_allclose(out, lut, atol=0)
+
+
+def test_ablation_paths_differ_and_norm_is_zero_mean():
+    rng = np.random.default_rng(0)
+    audio = jnp.asarray(
+        rng.standard_normal((4, 16000)).astype(np.float32) * 0.05
+    )
+    frames = fex_frames(audio, CFG)
+    fv_raw = quant.quantize_unsigned(frames, 12, CFG.quant_full_scale)
+    fv_log = quant.log_compress_lut(fv_raw, 12, 10)
+    stats = fit_norm_stats(fv_log)
+    base, _ = fex_forward(audio, CFG, use_log=False, use_norm=False)
+    logd, _ = fex_forward(audio, CFG, use_log=True, use_norm=False)
+    norm, _ = fex_forward(
+        audio, CFG, norm_stats=stats, use_log=True, use_norm=True
+    )
+    assert not np.allclose(base, logd)
+    assert not np.allclose(logd, norm)
+    # normalized features ~zero mean unit-ish variance per channel
+    m = np.asarray(norm).reshape(-1, 16).mean(0)
+    assert np.abs(m).max() < 0.5
+    # all within the Q6.8 representable range
+    assert float(jnp.abs(norm).max()) <= quant.ACT_Q6_8.max_value
+
+
+def test_fex_is_differentiable():
+    audio = jnp.ones((1, 4096)) * 0.1
+    stats = FExNormStats(mu=jnp.full((16,), 100.0), sigma=jnp.full((16,), 50.0))
+
+    def loss(a):
+        fv, _ = fex_forward(a, CFG, stats)
+        return jnp.sum(fv**2)
+
+    g = jax.grad(loss)(audio)
+    assert bool(jnp.isfinite(g).all())
+    assert float(jnp.abs(g).max()) > 0

@@ -1,0 +1,72 @@
+"""Filter design: biquad vs scipy oracle, Mel spacing, Q factor."""
+
+import numpy as np
+import pytest
+from scipy import signal as sps
+
+from repro.core.filters import (
+    biquad_frequency_response,
+    design_bandpass_biquad,
+    design_filterbank,
+    hz_to_mel,
+    mel_center_frequencies,
+    mel_to_hz,
+)
+
+
+def test_mel_roundtrip():
+    f = np.array([100.0, 440.0, 1000.0, 8000.0])
+    np.testing.assert_allclose(mel_to_hz(hz_to_mel(f)), f, rtol=1e-10)
+
+
+def test_mel_spacing_endpoints_and_monotone():
+    f0 = mel_center_frequencies(16, 100.0, 8000.0)
+    assert abs(f0[0] - 100.0) < 1e-6 and abs(f0[-1] - 8000.0) < 1e-3
+    assert np.all(np.diff(f0) > 0)
+    # Mel spacing: low-frequency channels closer together in log terms
+    # -> linear spacing increases with frequency (paper Fig. 17)
+    assert np.diff(f0)[-1] > np.diff(f0)[0]
+
+
+def test_biquad_matches_scipy_butter_bandpass():
+    """Our bilinear BPF response matches scipy butter(1, band,
+    'bandpass') (same 2nd-order Butterworth band-pass; the two designs
+    pre-warp center vs edges, so responses agree to ~1% in-band)."""
+    fs, f0, q = 32000.0, 1000.0, 2.0
+    c = design_bandpass_biquad(f0, fs, q)
+    bw = f0 / q
+    lo = f0 * (np.sqrt(1 + 1 / (4 * q * q)) - 1 / (2 * q))
+    hi = lo + bw
+    b_ref, a_ref = sps.butter(1, [lo, hi], btype="bandpass", fs=fs)
+    freqs = np.linspace(200, 4000, 200)
+    _, h_ref = sps.freqz(b_ref, a_ref, worN=freqs, fs=fs)
+    h_ours = biquad_frequency_response(c, freqs)[0]
+    np.testing.assert_allclose(h_ours, np.abs(h_ref), rtol=0.02, atol=5e-3)
+
+
+def test_unity_peak_gain_at_center():
+    coeffs = design_filterbank(16, 32000.0)
+    mags = biquad_frequency_response(coeffs, coeffs.f0)
+    np.testing.assert_allclose(np.diagonal(mags), 1.0, rtol=1e-6)
+
+
+def test_q_factor_bandwidth():
+    fs, f0, q = 32000.0, 1000.0, 2.0
+    c = design_bandpass_biquad(f0, fs, q)
+    freqs = np.linspace(100, 4000, 20000)
+    mag = biquad_frequency_response(c, freqs)[0]
+    above = freqs[mag >= 1 / np.sqrt(2)]
+    bw = above.max() - above.min()
+    assert abs(bw - f0 / q) / (f0 / q) < 0.05  # within 5% (pre-warp)
+
+
+def test_stability_all_channels():
+    coeffs = design_filterbank(16, 32000.0)
+    for i in range(16):
+        poles = np.roots([1.0, coeffs.a1[i], coeffs.a2[i]])
+        assert np.all(np.abs(poles) < 1.0)
+
+
+def test_rejects_out_of_range_center():
+    with pytest.raises(ValueError):
+        design_bandpass_biquad(20000.0, 32000.0, 2.0)

@@ -1,0 +1,113 @@
+"""Optimizer: AdamW math, int8 moments, schedules."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.training.optimizer import (
+    AdamWConfig,
+    ReduceLROnPlateau,
+    adamw_update,
+    cosine_schedule,
+    init_opt_state,
+)
+
+
+def _quadratic_losses(cfg, steps=60, dim=512):
+    """Minimize ||x - t||^2 from a fixed start; returns loss trajectory.
+
+    dim=512 makes the (16, 512) weight big enough for the int8-moment
+    path (>= 4096 elements)."""
+    target = jnp.asarray(
+        np.random.default_rng(0).standard_normal((16, dim)), jnp.float32
+    )
+    params = {"w": jnp.zeros((16, dim), jnp.float32)}
+    state = init_opt_state(params, cfg)
+    losses = []
+    for _ in range(steps):
+        loss, g = jax.value_and_grad(
+            lambda p: jnp.mean((p["w"] - target) ** 2)
+        )(params)
+        params, state, _ = adamw_update(params, g, state, cfg)
+        losses.append(float(loss))
+    return losses
+
+
+def test_adamw_first_step_matches_reference():
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, grad_clip=1e9)
+    params = {"w": jnp.asarray([1.0, -2.0])}
+    grads = {"w": jnp.asarray([0.5, -0.5])}
+    state = init_opt_state(params, cfg)
+    new_p, state, metrics = adamw_update(params, grads, state, cfg)
+    # bias-corrected first Adam step == -lr * sign-ish update
+    m_hat = 0.1 * jnp.asarray([0.5, -0.5]) / 0.1
+    v_hat = 0.001 * jnp.asarray([0.25, 0.25]) / 0.001
+    ref = params["w"] - 0.1 * m_hat / (jnp.sqrt(v_hat) + cfg.eps)
+    np.testing.assert_allclose(np.asarray(new_p["w"]), np.asarray(ref), rtol=1e-5)
+    assert abs(float(metrics["grad_norm"]) - float(jnp.sqrt(0.5))) < 1e-5
+
+
+def test_grad_clip_applies():
+    cfg = AdamWConfig(lr=1.0, grad_clip=0.001, weight_decay=0.0)
+    params = {"w": jnp.zeros(4)}
+    grads = {"w": jnp.full(4, 100.0)}
+    state = init_opt_state(params, cfg)
+    new_p, _, _ = adamw_update(params, grads, state, cfg)
+    # direction preserved, magnitude bounded by lr (Adam normalizes) —
+    # mostly checks no NaN/exploding behavior under clipping
+    assert bool(jnp.isfinite(new_p["w"]).all())
+
+
+def test_fp32_and_int8_states_converge_similarly():
+    fp = _quadratic_losses(AdamWConfig(lr=0.05, weight_decay=0.0))
+    q8 = _quadratic_losses(
+        AdamWConfig(lr=0.05, weight_decay=0.0, state_dtype="int8")
+    )
+    assert fp[-1] < 0.3 * fp[0]
+    assert q8[-1] < 0.3 * q8[0]
+    assert abs(q8[-1] - fp[-1]) < 0.2 * fp[0]  # int8 tracks fp32
+
+
+def test_int8_state_only_for_big_leaves():
+    cfg = AdamWConfig(state_dtype="int8")
+    params = {
+        "big": jnp.zeros((128, 128)),
+        "small": jnp.zeros((16,)),
+    }
+    st = init_opt_state(params, cfg)
+    assert isinstance(st["m"]["big"], dict) and "q" in st["m"]["big"]
+    assert st["m"]["big"]["q"].dtype == jnp.int8
+    assert st["m"]["small"].dtype == jnp.float32
+
+
+def test_bf16_params_updated_via_fp32_math():
+    cfg = AdamWConfig(lr=0.01, weight_decay=0.0)
+    params = {"w": jnp.ones(4, jnp.bfloat16)}
+    grads = {"w": jnp.full(4, 0.1, jnp.bfloat16)}
+    state = init_opt_state(params, cfg)
+    new_p, _, _ = adamw_update(params, grads, state, cfg)
+    assert new_p["w"].dtype == jnp.bfloat16
+    assert float(new_p["w"][0]) < 1.0
+
+
+def test_reduce_lr_on_plateau_matches_paper_recipe():
+    s = ReduceLROnPlateau(lr=1e-3, factor=0.8, patience=3, min_lr=5e-4)
+    # improving: lr stays
+    for m in [1.0, 0.9, 0.8]:
+        assert s.step(m) == 1e-3
+    # plateau of patience+1 epochs drops lr by 0.8
+    for m in [0.8, 0.8, 0.8]:
+        s.step(0.8)
+    lr = s.step(0.8)
+    assert abs(lr - 8e-4) < 1e-12
+    # floor at 5e-4
+    for _ in range(40):
+        lr = s.step(0.8)
+    assert lr == 5e-4
+
+
+def test_cosine_schedule_shape():
+    lr = cosine_schedule(1e-3, warmup=10, total=100)
+    assert float(lr(jnp.int32(0))) == 0.0
+    assert abs(float(lr(jnp.int32(10))) - 1e-3) < 1e-9
+    assert float(lr(jnp.int32(100))) < 1e-5

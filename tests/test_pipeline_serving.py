@@ -1,0 +1,80 @@
+"""KWS pipeline end-to-end (tiny) + streaming server mechanics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fex import fit_norm_stats
+from repro.core import quant
+from repro.core.pipeline import KWSPipeline, KWSPipelineConfig
+from repro.serving.serve_loop import StreamingKWSServer
+
+
+def _pipeline_with_stats(audio):
+    # bootstrap pass (no normalizer) records FV_Raw to fit mu/sigma,
+    # mirroring the chip's recording flow (Section III-F)
+    boot = KWSPipeline(KWSPipelineConfig(use_norm=False))
+    _, fv_raw = boot.features_software(audio)
+    fv_log = quant.log_compress_lut(fv_raw, 12, 10)
+    stats = fit_norm_stats(fv_log)
+    return KWSPipeline(KWSPipelineConfig(), norm_stats=stats)
+
+
+def test_pipeline_features_and_logits_shapes():
+    rng = np.random.default_rng(0)
+    audio = jnp.asarray(rng.standard_normal((4, 16000)).astype(np.float32) * 0.05)
+    pipe = _pipeline_with_stats(audio)
+    fv, raw = pipe.features_software(audio)
+    assert fv.shape == (4, 62, 16) and raw.shape == (4, 62, 16)
+    params = pipe.init_params(jax.random.PRNGKey(0))
+    logits = pipe.logits(params, fv)
+    assert logits.shape == (4, 12)
+
+
+def test_streaming_matches_batch_inference():
+    rng = np.random.default_rng(1)
+    audio = jnp.asarray(rng.standard_normal((2, 16000)).astype(np.float32) * 0.05)
+    pipe = _pipeline_with_stats(audio)
+    params = pipe.init_params(jax.random.PRNGKey(1))
+    fv, _ = pipe.features_software(audio)
+    batch_logits = pipe.logits(params, fv)
+    states = pipe.streaming_init(2)
+    for t in range(fv.shape[1]):
+        states, logits = pipe.streaming_step(params, states, fv[:, t])
+    np.testing.assert_allclose(
+        np.asarray(batch_logits), np.asarray(logits), atol=1e-5
+    )
+
+
+def test_streaming_server_lifecycle():
+    rng = np.random.default_rng(2)
+    audio = jnp.asarray(rng.standard_normal((2, 16000)).astype(np.float32) * 0.05)
+    pipe = _pipeline_with_stats(audio)
+    params = pipe.init_params(jax.random.PRNGKey(2))
+    srv = StreamingKWSServer(pipe, params, max_streams=4)
+    srv.open_stream(101)
+    srv.open_stream(202)
+    out = srv.step({101: np.ones(16, np.float32),
+                    202: np.zeros(16, np.float32)})
+    assert set(out) == {101, 202}
+    assert abs(out[101]["probs"].sum() - (1 - srv.smoothing)) < 1e-5
+    srv.close_stream(101)
+    out = srv.step({202: np.ones(16, np.float32)})
+    assert set(out) == {202}
+    # slot reuse
+    srv.open_stream(303)
+    assert len(srv.active) == 2
+
+
+def test_server_capacity():
+    rng = np.random.default_rng(3)
+    audio = jnp.asarray(rng.standard_normal((1, 16000)).astype(np.float32) * 0.05)
+    pipe = _pipeline_with_stats(audio)
+    params = pipe.init_params(jax.random.PRNGKey(3))
+    srv = StreamingKWSServer(pipe, params, max_streams=2)
+    srv.open_stream(1)
+    srv.open_stream(2)
+    import pytest
+
+    with pytest.raises(RuntimeError):
+        srv.open_stream(3)

@@ -1,0 +1,106 @@
+"""Chunked SSD (Mamba2) and WKV6 (RWKV6) vs sequential oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.mamba2 import _ssd_chunked, ssd_sequential
+from repro.models.rwkv6 import wkv6_chunked, wkv6_sequential
+
+RNG = np.random.default_rng(7)
+
+
+@pytest.mark.parametrize("l,q", [(32, 8), (64, 16), (50, 16), (16, 64)])
+def test_ssd_chunked_matches_sequential(l, q):
+    b, h, p, n = 2, 3, 8, 5
+    xh = jnp.asarray(RNG.standard_normal((b, l, h, p)).astype(np.float32))
+    a_log = jnp.asarray(
+        -np.abs(RNG.standard_normal((b, l, h))).astype(np.float32)
+    )
+    bm = jnp.asarray(RNG.standard_normal((b, l, n)).astype(np.float32))
+    cm = jnp.asarray(RNG.standard_normal((b, l, n)).astype(np.float32))
+    y_c, _ = _ssd_chunked(xh, a_log, bm, cm, q)
+    y_s = ssd_sequential(xh, a_log, bm, cm)
+    np.testing.assert_allclose(
+        np.asarray(y_c), np.asarray(y_s), rtol=2e-4, atol=2e-4
+    )
+
+
+def test_ssd_strong_decay_stable():
+    b, l, h, p, n = 1, 64, 2, 4, 4
+    xh = jnp.asarray(RNG.standard_normal((b, l, h, p)).astype(np.float32))
+    a_log = jnp.asarray(
+        -np.abs(RNG.standard_normal((b, l, h)) * 20).astype(np.float32)
+    )
+    bm = jnp.asarray(RNG.standard_normal((b, l, n)).astype(np.float32))
+    cm = jnp.asarray(RNG.standard_normal((b, l, n)).astype(np.float32))
+    y_c, _ = _ssd_chunked(xh, a_log, bm, cm, 16)
+    assert bool(jnp.isfinite(y_c).all())
+    y_s = ssd_sequential(xh, a_log, bm, cm)
+    np.testing.assert_allclose(
+        np.asarray(y_c), np.asarray(y_s), atol=5e-4
+    )
+
+
+def test_ssd_final_state_feeds_decode():
+    """Chunked final state == sequential final state (handoff contract)."""
+    b, l, h, p, n = 1, 32, 2, 4, 4
+    xh = jnp.asarray(RNG.standard_normal((b, l, h, p)).astype(np.float32))
+    a_log = jnp.asarray(
+        -np.abs(RNG.standard_normal((b, l, h))).astype(np.float32)
+    )
+    bm = jnp.asarray(RNG.standard_normal((b, l, n)).astype(np.float32))
+    cm = jnp.asarray(RNG.standard_normal((b, l, n)).astype(np.float32))
+    _, s_c = _ssd_chunked(xh, a_log, bm, cm, 8)
+
+    def step(s, inputs):
+        x_t, a_t, b_t, _ = inputs
+        s = s * jnp.exp(a_t)[:, :, None, None] + jnp.einsum(
+            "bn,bhp->bhnp", b_t, x_t
+        )
+        return s, None
+
+    s_seq, _ = jax.lax.scan(
+        step,
+        jnp.zeros((b, h, n, p)),
+        (
+            jnp.moveaxis(xh, 1, 0),
+            jnp.moveaxis(a_log, 1, 0),
+            jnp.moveaxis(bm, 1, 0),
+            jnp.moveaxis(cm, 1, 0),
+        ),
+    )
+    np.testing.assert_allclose(
+        np.asarray(s_c), np.asarray(s_seq), rtol=1e-4, atol=1e-4
+    )
+
+
+@pytest.mark.parametrize("l,q", [(32, 8), (48, 16), (33, 16)])
+def test_wkv6_chunked_matches_sequential(l, q):
+    b, h, p = 2, 3, 8
+    r = jnp.asarray(RNG.standard_normal((b, l, h, p)).astype(np.float32))
+    k = jnp.asarray(RNG.standard_normal((b, l, h, p)).astype(np.float32))
+    v = jnp.asarray(RNG.standard_normal((b, l, h, p)).astype(np.float32))
+    logw = jnp.asarray(
+        -np.exp(RNG.standard_normal((b, l, h, p)) - 1).astype(np.float32)
+    )
+    u = jnp.asarray(RNG.standard_normal((h, p)).astype(np.float32) * 0.3)
+    yc, sc = wkv6_chunked(r, k, v, logw, u, q)
+    ys = wkv6_sequential(r, k, v, logw, u)
+    np.testing.assert_allclose(
+        np.asarray(yc), np.asarray(ys), rtol=2e-4, atol=2e-4
+    )
+
+
+def test_wkv6_strong_decay_no_overflow():
+    b, l, h, p = 1, 32, 2, 4
+    r = jnp.asarray(RNG.standard_normal((b, l, h, p)).astype(np.float32))
+    k = jnp.asarray(RNG.standard_normal((b, l, h, p)).astype(np.float32))
+    v = jnp.asarray(RNG.standard_normal((b, l, h, p)).astype(np.float32))
+    logw = jnp.full((b, l, h, p), -50.0, jnp.float32)  # near-total decay
+    u = jnp.zeros((h, p), jnp.float32)
+    yc, _ = wkv6_chunked(r, k, v, logw, u, 8)
+    assert bool(jnp.isfinite(yc).all())
+    ys = wkv6_sequential(r, k, v, logw, u)
+    np.testing.assert_allclose(np.asarray(yc), np.asarray(ys), atol=1e-4)
