@@ -14,11 +14,10 @@ from benchmarks.common import (
     datasets,
     evaluate,
     frames_to_features,
-    record_software_frames,
     train_classifier,
 )
-from repro.core.calibration import calibrate_chip
-from repro.core.pipeline import record_features_hardware
+from repro.core.calibration import calibrate_state
+from repro.core.pipeline import KWSPipeline, KWSPipelineConfig
 from repro.core.tdfex import TDFExConfig, draw_chip
 from repro.data.gscd import CLASSES
 from repro.core.fex import FExConfig
@@ -34,18 +33,17 @@ def run(seed: int = 0):
     # 86% (chip) vs 91% (software) gap
     tdcfg = dataclasses.replace(TDFExConfig(), phase_noise_rms=1.4)
     chip = draw_chip(jax.random.PRNGKey(seed), tdcfg)
-    beta, alpha = calibrate_chip(tdcfg, chip)
+    state = calibrate_state(tdcfg, chip)
+    pipe_hw = KWSPipeline(
+        KWSPipelineConfig(frontend="hardware", tdfex=tdcfg), state=state
+    )
     train, test = datasets(seed)
 
     # record FV_Raw from the "chip" for train + test (Section III-F flow)
     key = jax.random.PRNGKey(seed + 99)
     k1, k2 = jax.random.split(key)
-    raw_tr = record_features_hardware(
-        train["audio"], tdcfg, chip, beta, alpha, key=k1
-    )
-    raw_te = record_features_hardware(
-        test["audio"], tdcfg, chip, beta, alpha, key=k2
-    )
+    raw_tr = pipe_hw.record_features(train["audio"], key=k1)
+    raw_te = pipe_hw.record_features(test["audio"], key=k2)
     cfg = tdcfg.fex
     ftr, stats = frames_to_features(
         raw_tr, cfg, True, True, already_raw=True
@@ -57,11 +55,17 @@ def run(seed: int = 0):
     acc, conf = evaluate(model, fte, test["label"])
     print(f"  hardware-sim accuracy: {acc:6.2%} (paper chip: 86.03%)")
 
-    # software-model comparison on the same data/split
-    fr_tr = record_software_frames(train["audio"], cfg)
-    fr_te = record_software_frames(test["audio"], cfg)
-    str_, stats_sw = frames_to_features(fr_tr, cfg, True, True)
-    ste, _ = frames_to_features(fr_te, cfg, True, True, stats=stats_sw)
+    # software-model comparison on the same data/split — the same
+    # pipeline call sites with frontend="software"
+    pipe_sw = KWSPipeline(KWSPipelineConfig(frontend="software"))
+    raw_sw_tr = pipe_sw.record_features(train["audio"])
+    raw_sw_te = pipe_sw.record_features(test["audio"])
+    str_, stats_sw = frames_to_features(
+        raw_sw_tr, cfg, True, True, already_raw=True
+    )
+    ste, _ = frames_to_features(
+        raw_sw_te, cfg, True, True, stats=stats_sw, already_raw=True
+    )
     model_sw = train_classifier(str_, train["label"], seed=seed)
     acc_sw, _ = evaluate(model_sw, ste, test["label"])
     print(f"  software-model accuracy: {acc_sw:6.2%} (paper: 91.35%)")

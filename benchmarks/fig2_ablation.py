@@ -11,18 +11,21 @@ from benchmarks.common import (
     datasets,
     evaluate,
     frames_to_features,
-    record_software_frames,
     train_classifier,
 )
 from repro.core.fex import FExConfig
+from repro.core.pipeline import KWSPipeline, KWSPipelineConfig
 
 
 def run(seed: int = 0):
     print("== Fig. 2: log-compression + normalization ablation ==")
     cfg = FExConfig()
     train, test = datasets(seed)
-    fr_train = record_software_frames(train["audio"], cfg)
-    fr_test = record_software_frames(test["audio"], cfg)
+    # record FV_Raw once via the registered software frontend; the
+    # ablation only varies the digital back-end (log / norm)
+    pipe = KWSPipeline(KWSPipelineConfig(frontend="software", fex=cfg))
+    raw_train = pipe.record_features(train["audio"])
+    raw_test = pipe.record_features(test["audio"])
 
     results = {}
     for name, use_log, use_norm in [
@@ -30,9 +33,12 @@ def run(seed: int = 0):
         ("+log", True, False),
         ("+log+norm", True, True),
     ]:
-        ftr, stats = frames_to_features(fr_train, cfg, use_log, use_norm)
+        ftr, stats = frames_to_features(
+            raw_train, cfg, use_log, use_norm, already_raw=True
+        )
         fte, _ = frames_to_features(
-            fr_test, cfg, use_log, use_norm, stats=stats
+            raw_test, cfg, use_log, use_norm, stats=stats,
+            already_raw=True
         )
         model = train_classifier(ftr, train["label"], seed=seed)
         acc, _ = evaluate(model, fte, test["label"])

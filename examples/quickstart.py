@@ -48,10 +48,24 @@ def main():
     stats = fit_norm_stats(fv_log)
     pipe = KWSPipeline(KWSPipelineConfig(), norm_stats=stats)
     params = pipe.init_params(jax.random.PRNGKey(0))
-    fv_norm, _ = pipe.features_software(jnp.asarray(audio[None]))
+    fv_norm, _ = pipe.features(jnp.asarray(audio[None]))
     scores = pipe.logits_all_frames(params, fv_norm)
     top = int(jnp.argmax(scores[0, -1]))
     print(f"classifier (untrained) final-frame top class: {CLASSES[top]}")
+
+    # the same call site runs every registered feature path: the paper's
+    # whole point is that the analog frontend is swappable
+    from repro.core.frontend import available_frontends
+
+    for name in available_frontends():
+        p = KWSPipeline(
+            KWSPipelineConfig(frontend=name), norm_stats=stats
+        )
+        st = p.init_frontend_state(mismatch=False)
+        fv_f, raw_f = p.features(jnp.asarray(audio[None]), st)
+        err = float(jnp.abs(raw_f - fv_raw).max())
+        print(f"frontend {name:15s}: FV_Raw max |diff| vs software "
+              f"reference = {err:.1f} LSB")
 
     acc = paper_accelerator()
     pm = paper_power_model()

@@ -39,8 +39,9 @@ def main():
     import numpy as np
 
     from repro.core import quant
-    from repro.core.fex import FExConfig, FExNormStats, fex_frames
+    from repro.core.fex import FExConfig, FExNormStats
     from repro.core.gru import GRUConfig, gru_classifier_forward, init_gru_classifier
+    from repro.core.pipeline import KWSPipeline, KWSPipelineConfig
     from repro.data.gscd import CLASSES, make_dataset
     from repro.distributed.fault_tolerance import (
         CheckpointManager, CheckpointPolicy, StragglerMonitor)
@@ -53,28 +54,19 @@ def main():
                         unknown_split="test")
     fcfg = FExConfig()
 
-    print("== extracting features (software-model FEx) ==")
-    extract = jax.jit(lambda a: fex_frames(a, fcfg))
-
-    def features(audio):
-        outs = []
-        for i in range(0, len(audio), 64):
-            fr = extract(jnp.asarray(audio[i:i + 64]))
-            outs.append(np.asarray(quant.quantize_unsigned(
-                fr, 12, fcfg.quant_full_scale)))
-        return np.concatenate(outs)
-
-    raw_tr, raw_te = features(train["audio"]), features(test["audio"])
+    print("== extracting features (frontend='software') ==")
+    pipe = KWSPipeline(KWSPipelineConfig(fex=fcfg))
+    raw_tr = pipe.record_features(train["audio"])
+    raw_te = pipe.record_features(test["audio"])
     log_tr = quant.log_compress_lut(jnp.asarray(raw_tr), 12, 10)
     stats = FExNormStats(
         mu=log_tr.reshape(-1, 16).mean(0),
         sigma=log_tr.reshape(-1, 16).std(0) + 1e-3,
     )
+    pipe = KWSPipeline(KWSPipelineConfig(fex=fcfg), norm_stats=stats)
 
     def normalize(raw):
-        x = quant.log_compress_lut(jnp.asarray(raw), 12, 10)
-        x = (x - stats.mu) / stats.sigma
-        return np.asarray(quant.fake_quant(x, quant.ACT_Q6_8))
+        return np.asarray(pipe.features_from_raw(jnp.asarray(raw)))
 
     ftr, fte = normalize(raw_tr), normalize(raw_te)
 
@@ -103,6 +95,11 @@ def main():
     if args.dp:
         from jax.sharding import PartitionSpec as P
 
+        try:  # jax >= 0.5 exposes shard_map at the top level
+            from jax import shard_map
+        except ImportError:
+            from jax.experimental.shard_map import shard_map
+
         from repro.distributed.collectives import (
             compressed_psum_with_error_feedback, init_residual)
 
@@ -126,7 +123,7 @@ def main():
     @jax.jit
     def step(p, o, fv, y, lr, r):
         if args.dp:
-            l, g, r = jax.shard_map(
+            l, g, r = shard_map(
                 dp_grads, mesh=mesh,
                 in_specs=(P(), P("data"), P("data"), P()),
                 out_specs=(P(), P(), P()),

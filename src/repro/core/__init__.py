@@ -6,6 +6,13 @@ from repro.core.filters import (
     design_filterbank,
     mel_center_frequencies,
 )
+from repro.core.frontend import (
+    FeatureFrontend,
+    FrontendState,
+    available_frontends,
+    get_frontend,
+    register_frontend,
+)
 from repro.core.gru import GRUConfig, gru_classifier_forward, init_gru_classifier
 from repro.core.pipeline import KWSPipeline, KWSPipelineConfig
 from repro.core.tdfex import TDFExConfig, TDFExState, tdfex_forward
@@ -18,6 +25,11 @@ __all__ = [
     "BiquadCoeffs",
     "design_filterbank",
     "mel_center_frequencies",
+    "FeatureFrontend",
+    "FrontendState",
+    "available_frontends",
+    "get_frontend",
+    "register_frontend",
     "GRUConfig",
     "gru_classifier_forward",
     "init_gru_classifier",

@@ -8,6 +8,9 @@ The chip requires:
           response (Fig. 17a -> 17b);
   mu/sigma — mean/std of FV_Log over the *training set*, used by the input
           normalizer (Section III-F applies the same mu/sigma at test time).
+
+`calibrate_state` packages the whole bench flow into the `FrontendState`
+pytree the pipeline's "hardware"/"hardware-pallas" frontends consume.
 """
 
 from __future__ import annotations
@@ -21,6 +24,7 @@ import numpy as np
 from repro.core import quant
 from repro.core.fex import FExNormStats
 from repro.core.filters import design_filterbank
+from repro.core.frontend import FrontendState
 from repro.core.tdfex import (
     TDFExConfig,
     TDFExState,
@@ -31,6 +35,7 @@ __all__ = [
     "measure_beta",
     "measure_alpha",
     "calibrate_chip",
+    "calibrate_state",
     "fit_norm_stats_from_counts",
 ]
 
@@ -101,6 +106,28 @@ def calibrate_chip(
     beta = measure_beta(cfg, chip, key=kb)
     alpha = measure_alpha(cfg, beta, chip, key=ka)
     return beta, alpha
+
+
+def calibrate_state(
+    cfg: TDFExConfig,
+    chip: Optional[TDFExState] = None,
+    key: Optional[jax.Array] = None,
+    norm_stats: Optional[FExNormStats] = None,
+) -> FrontendState:
+    """Full bench calibration -> the `FrontendState` the hardware
+    frontends consume: beta/alpha measurements plus the (possibly
+    mismatched) Rec-BPF coefficients designed once for this die.
+
+    ``norm_stats`` (fit from recorded training features, see
+    `fit_norm_stats_from_counts`) can be attached now or later via
+    `FrontendState.with_norm_stats`.
+    """
+    from repro.core.frontend import hardware_state
+
+    beta, alpha = calibrate_chip(cfg, chip, key)
+    return hardware_state(
+        cfg, chip, beta=beta, alpha=alpha, norm_stats=norm_stats
+    )
 
 
 def fit_norm_stats_from_counts(

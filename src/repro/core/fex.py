@@ -31,6 +31,7 @@ __all__ = [
     "FExNormStats",
     "oversample2x",
     "biquad_filterbank",
+    "biquad_filterbank_streaming",
     "full_wave_rectify",
     "frame_average",
     "fex_frames",
@@ -91,33 +92,60 @@ def oversample2x(audio: jnp.ndarray) -> jnp.ndarray:
     return out.reshape(*audio.shape[:-1], audio.shape[-1] * 2)
 
 
-def biquad_filterbank(x: jnp.ndarray, coeffs: BiquadCoeffs) -> jnp.ndarray:
-    """Apply C biquads to x: (..., T) -> (..., T, C).
+def _coeff_rows(coeffs, dtype):
+    """Accept either a BiquadCoeffs or a stacked (5, C) array (the form a
+    `FrontendState` carries through jit) -> (b0, b1, b2, a1, a2) arrays."""
+    if isinstance(coeffs, BiquadCoeffs):
+        return coeffs.as_arrays(dtype=dtype)
+    arr = jnp.asarray(coeffs, dtype=dtype)
+    return arr[0], arr[1], arr[2], arr[3], arr[4]
 
-    Transposed direct-form II, scanned over time; this is the jnp oracle
-    for the fused Pallas kernel.
+
+def biquad_filterbank_streaming(
+    x: jnp.ndarray,
+    coeffs,
+    state: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    """Stateful filterbank step for chunked/streaming input.
+
+    x: (B, T_chunk); coeffs: BiquadCoeffs or stacked (5, C) array;
+    state: transposed-DF-II carry (s1, s2), each (B, C), or None for a
+    zero (quiescent) filter. Returns (y (B, T_chunk, C), new_state) so a
+    caller can feed consecutive chunks and obtain the same output as one
+    batch pass over the concatenated signal.
     """
-    b0, b1, b2, a1, a2 = coeffs.as_arrays(dtype=x.dtype)
-    batch_shape = x.shape[:-1]
-    t = x.shape[-1]
-    xf = x.reshape((-1, t))  # (B, T)
-    bsz = xf.shape[0]
-    c = coeffs.num_channels
+    b0, b1, b2, a1, a2 = _coeff_rows(coeffs, x.dtype)
+    bsz, t = x.shape
+    c = b0.shape[-1]
 
-    def step(state, x_t):
-        s1, s2 = state  # each (B, C)
+    def step(carry, x_t):
+        s1, s2 = carry  # each (B, C)
         xc = x_t[:, None]  # (B, 1)
         y = b0 * xc + s1
         s1_new = b1 * xc - a1 * y + s2
         s2_new = b2 * xc - a2 * y
         return (s1_new, s2_new), y
 
-    init = (
-        jnp.zeros((bsz, c), dtype=x.dtype),
-        jnp.zeros((bsz, c), dtype=x.dtype),
-    )
-    _, ys = jax.lax.scan(step, init, jnp.moveaxis(xf, -1, 0))  # (T, B, C)
-    ys = jnp.moveaxis(ys, 0, -2)  # (B, T, C)
+    if state is None:
+        state = (
+            jnp.zeros((bsz, c), dtype=x.dtype),
+            jnp.zeros((bsz, c), dtype=x.dtype),
+        )
+    state, ys = jax.lax.scan(step, state, jnp.moveaxis(x, -1, 0))  # (T, B, C)
+    return jnp.moveaxis(ys, 0, -2), state
+
+
+def biquad_filterbank(x: jnp.ndarray, coeffs) -> jnp.ndarray:
+    """Apply C biquads to x: (..., T) -> (..., T, C).
+
+    Transposed direct-form II, scanned over time; this is the jnp oracle
+    for the fused Pallas kernel.
+    """
+    batch_shape = x.shape[:-1]
+    t = x.shape[-1]
+    xf = x.reshape((-1, t))  # (B, T)
+    ys, _ = biquad_filterbank_streaming(xf, coeffs)
+    c = ys.shape[-1]
     return ys.reshape(*batch_shape, t, c)
 
 

@@ -1,15 +1,31 @@
 """End-to-end KWS pipeline assembly (Fig. 3): FEx -> classifier.
 
-Two feature paths share one classifier:
-  * "software"  — the Section II model (`repro.core.fex`), differentiable,
-                  used for QAT training and the Fig. 2 ablation;
-  * "hardware"  — the Section III time-domain simulation
-                  (`repro.core.tdfex`) with mismatch + calibration, used to
-                  reproduce the measured-vs-software accuracy gap.
+The feature extractor is pluggable: `KWSPipelineConfig.frontend` names a
+registered `repro.core.frontend.FeatureFrontend` ("software",
+"hardware", "hardware-pallas" — see that module), and every entry point
+here routes through it:
 
-The classifier is always trained on features *recorded from the chosen
-path* (the paper records FV_Raw from the chip for its training set —
-Section III-F); `record_features` is that recording step.
+  features(audio, state)                batch audio -> (FV_Norm, FV_Raw)
+  record_features(audio, state)         batched numpy recording of
+                                        FV_Raw (the Section III-F flow:
+                                        the paper records features from
+                                        the chip once, then trains)
+  predict(params, audio, state)         features + GRU + argmax
+  streaming_features_step(carry, chunk) one 16 ms raw-audio hop ->
+                                        one FV_Norm frame per stream
+  streaming_step(params, states, fv_t)  one GRU step per 16 ms frame
+
+All frontend-side parameters (norm stats, chip mismatch, beta/alpha
+calibration, filterbank coefficients) live in one `FrontendState`
+pytree, built by `init_frontend_state` / `repro.core.calibration` and
+passed to the calls above (or bound at construction time); loose
+``beta``/``alpha``/``norm_stats`` positional arguments are gone.
+
+The FV_Raw -> FV_Norm post-processing (log LUT, (x-mu)/sigma, Q6.8) is
+the chip's digital back-end and is shared by every frontend
+(`features_from_raw`). The classifier is always trained on features
+*recorded from the chosen frontend*, exactly as the paper records FV_Raw
+from the chip for its training set.
 """
 
 from __future__ import annotations
@@ -23,11 +39,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import quant
-from repro.core.fex import (
-    FExConfig,
-    FExNormStats,
-    fex_forward,
-    fex_frames,
+from repro.core.fex import FExConfig, FExNormStats
+from repro.core.frontend import (
+    FeatureFrontend,
+    FrontendState,
+    get_frontend,
 )
 from repro.core.gru import (
     GRUConfig,
@@ -36,58 +52,127 @@ from repro.core.gru import (
     init_gru_classifier,
     init_states,
 )
-from repro.core.tdfex import TDFExConfig, TDFExState, tdfex_raw_counts, counts_to_fv_raw
+from repro.core.tdfex import TDFExConfig, TDFExState
 
-__all__ = ["KWSPipelineConfig", "KWSPipeline"]
+__all__ = [
+    "KWSPipelineConfig",
+    "KWSPipeline",
+    "record_features_hardware",
+]
 
 
 @dataclasses.dataclass(frozen=True)
 class KWSPipelineConfig:
+    frontend: str = "software"  # registered FeatureFrontend key
     fex: FExConfig = dataclasses.field(default_factory=FExConfig)
     gru: GRUConfig = dataclasses.field(default_factory=GRUConfig)
+    # Hardware-sim parameters for the "hardware*" frontends. None ->
+    # TDFExConfig built around `fex` (the paper's nominal chip).
+    tdfex: Optional[TDFExConfig] = None
     use_log: bool = True
     use_norm: bool = True
 
+    def __post_init__(self):
+        # The pipeline post-processes (and shapes chunks) with `fex`
+        # while the hardware frontends generate features with
+        # `tdfex.fex`; a disagreement would surface as silently wrong
+        # FV_Norm far from the misconfiguration.
+        if self.tdfex is not None and self.tdfex.fex != self.fex:
+            raise ValueError(
+                "KWSPipelineConfig.fex and KWSPipelineConfig.tdfex.fex "
+                "disagree; pass tdfex=TDFExConfig(fex=your_fex, ...)"
+            )
+
+    @property
+    def tdfex_config(self) -> TDFExConfig:
+        if self.tdfex is not None:
+            return self.tdfex
+        return TDFExConfig(fex=self.fex)
+
 
 class KWSPipeline:
-    """Stateless-functional pipeline with convenience wrappers."""
+    """Stateless-functional pipeline with convenience wrappers.
+
+    A `FrontendState` may be bound at construction (used as the default
+    for every call) or passed per call; methods never mutate it.
+    """
 
     def __init__(
         self,
         config: KWSPipelineConfig,
+        state: Optional[FrontendState] = None,
         norm_stats: Optional[FExNormStats] = None,
     ):
         self.config = config
-        self.norm_stats = norm_stats
+        self.frontend: FeatureFrontend = get_frontend(config.frontend)
+        if state is None:
+            state = FrontendState()
+        if norm_stats is not None:
+            state = state.with_norm_stats(norm_stats)
+        self.state = state
+
+    @property
+    def norm_stats(self) -> Optional[FExNormStats]:
+        return self.state.norm_stats
+
+    def _resolve(self, state: Optional[FrontendState]) -> FrontendState:
+        return self.state if state is None else state
+
+    # ---------- frontend state ----------
+
+    def init_frontend_state(
+        self, key: Optional[jax.Array] = None, **kwargs
+    ) -> FrontendState:
+        """Build this frontend's state (chip draw + beta/alpha calibration
+        for the hardware paths; a no-op shell for "software"). Any bound
+        norm_stats are carried over unless overridden via kwargs."""
+        kwargs.setdefault("norm_stats", self.state.norm_stats)
+        return self.frontend.init_state(self.config, key=key, **kwargs)
+
+    def with_state(self, state: FrontendState) -> "KWSPipeline":
+        """A copy of this pipeline with ``state`` bound as the default."""
+        return KWSPipeline(self.config, state=state)
 
     # ---------- feature extraction ----------
 
     @functools.partial(jax.jit, static_argnums=(0,))
-    def features_software(self, audio: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
-        """audio (B, T) -> (fv_norm (B, F, C), fv_raw codes)."""
-        return fex_forward(
-            audio,
-            self.config.fex,
-            norm_stats=self.norm_stats,
-            use_log=self.config.use_log,
-            use_norm=self.config.use_norm,
-        )
+    def _features_jit(self, audio, state, key):
+        fv_raw = self.frontend.raw_codes(audio, self.config, state, key=key)
+        return self._postprocess(fv_raw, state), fv_raw
 
-    def features_from_raw(self, fv_raw: jnp.ndarray) -> jnp.ndarray:
-        """Post-processing only: recorded FV_Raw codes -> FV_Norm.
+    def features(
+        self,
+        audio: jnp.ndarray,
+        state: Optional[FrontendState] = None,
+        key: Optional[jax.Array] = None,
+    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """audio (B, T) -> (fv_norm (B, F, C), fv_raw codes), via the
+        configured frontend. One call site for all registered paths."""
+        return self._features_jit(audio, self._resolve(state), key)
 
-        This is what the chip's digital back-end does after the decimation
-        filter, and what training consumes (features recorded once).
-        """
+    def features_software(self, audio: jnp.ndarray):
+        """Deprecated alias kept for the pre-registry API; equivalent to
+        `features` on a ``frontend="software"`` pipeline."""
+        if self.config.frontend != "software":
+            raise ValueError(
+                "features_software on a "
+                f"frontend={self.config.frontend!r} pipeline; "
+                "use features()"
+            )
+        return self.features(audio)
+
+    def _postprocess(self, fv_raw, state: FrontendState) -> jnp.ndarray:
+        """FV_Raw codes -> FV_Norm: the chip's digital back-end (log LUT,
+        normalizer, Q6.8 saturation), shared by every frontend."""
         x = fv_raw
         if self.config.use_log:
             x = quant.log_compress_lut(
                 x, self.config.fex.quant_bits, self.config.fex.log_bits
             )
         if self.config.use_norm:
-            if self.norm_stats is None:
+            if state.norm_stats is None:
                 raise ValueError("use_norm requires fitted norm_stats")
-            x = (x - self.norm_stats.mu) / self.norm_stats.sigma
+            x = (x - state.norm_stats.mu) / state.norm_stats.sigma
         else:
             in_bits = (
                 self.config.fex.log_bits
@@ -96,6 +181,39 @@ class KWSPipeline:
             )
             x = x * 2.0 ** -(in_bits - 5)
         return quant.fake_quant(x, quant.ACT_Q6_8)
+
+    def features_from_raw(
+        self, fv_raw: jnp.ndarray, state: Optional[FrontendState] = None
+    ) -> jnp.ndarray:
+        """Post-processing only: recorded FV_Raw codes -> FV_Norm."""
+        return self._postprocess(fv_raw, self._resolve(state))
+
+    def record_features(
+        self,
+        audio: np.ndarray,
+        state: Optional[FrontendState] = None,
+        key: Optional[jax.Array] = None,
+        batch_size: int = 64,
+    ) -> np.ndarray:
+        """Record FV_Raw codes in host-memory batches (Section III-F).
+
+        Works for any frontend; the hardware paths consume ``key`` for
+        their per-record noise draw (VTC noise / SRO jitter)."""
+        state = self._resolve(state)
+        fn = jax.jit(
+            lambda a, k: self.frontend.raw_codes(
+                a, self.config, state, key=k
+            )
+        )
+        outs = []
+        n = audio.shape[0]
+        for i in range(0, n, batch_size):
+            chunk = jnp.asarray(audio[i : i + batch_size])
+            k = None
+            if key is not None:
+                key, k = jax.random.split(key)
+            outs.append(np.asarray(fn(chunk, k)))
+        return np.concatenate(outs, axis=0)
 
     # ---------- classifier ----------
 
@@ -112,19 +230,62 @@ class KWSPipeline:
     def logits_all_frames(self, params, fv_norm: jnp.ndarray) -> jnp.ndarray:
         return gru_classifier_forward(params, fv_norm, self.config.gru)
 
-    def predict(self, params, audio: jnp.ndarray) -> jnp.ndarray:
-        fv_norm, _ = self.features_software(audio)
+    def predict(
+        self,
+        params,
+        audio: jnp.ndarray,
+        state: Optional[FrontendState] = None,
+        key: Optional[jax.Array] = None,
+    ) -> jnp.ndarray:
+        fv_norm, _ = self.features(audio, state, key)
         return jnp.argmax(self.logits(params, fv_norm), axis=-1)
 
     # ---------- streaming serving ----------
 
+    @property
+    def chunk_samples(self) -> int:
+        """Raw-audio samples per 16 ms streaming hop (at fs_audio)."""
+        fexc = self.config.fex
+        return int(round(fexc.fs_audio * fexc.frame_shift_ms / 1000.0))
+
     def streaming_init(self, batch: int):
+        """Classifier (GRU) state for a batch of streams."""
         return init_states(self.config.gru, batch)
 
     @functools.partial(jax.jit, static_argnums=(0,))
     def streaming_step(self, params, states, fv_t: jnp.ndarray):
         """One 16 ms frame for a batch of streams -> (states, logits)."""
         return gru_classifier_step(params, states, fv_t, self.config.gru)
+
+    def streaming_features_init(self, batch: int):
+        """Frontend carry (filter / SRO phase state) for batch streams."""
+        return self.frontend.streaming_init(self.config, batch)
+
+    @functools.partial(jax.jit, static_argnums=(0,))
+    def _sfeatures_jit(self, carry, chunk, state, key):
+        carry, fv_raw = self.frontend.streaming_step(
+            chunk, self.config, state, carry, key=key
+        )
+        fv_norm = self._postprocess(fv_raw[:, None, :], state)[:, 0, :]
+        return carry, fv_norm, fv_raw
+
+    def streaming_features_step(
+        self,
+        carry,
+        chunk: jnp.ndarray,
+        state: Optional[FrontendState] = None,
+        key: Optional[jax.Array] = None,
+    ):
+        """One raw-audio hop (B, chunk_samples) -> (carry, fv_norm (B, C)).
+
+        Feed consecutive 16 ms hops; the carry holds per-stream filter
+        and SRO-phase state so the concatenated stream matches the batch
+        `features` path (up to the documented chunk-edge approximation
+        of the 2x oversampler)."""
+        carry, fv_norm, _ = self._sfeatures_jit(
+            carry, chunk, self._resolve(state), key
+        )
+        return carry, fv_norm
 
 
 def record_features_hardware(
@@ -136,18 +297,15 @@ def record_features_hardware(
     key: Optional[jax.Array] = None,
     batch_size: int = 64,
 ) -> np.ndarray:
-    """Record FV_Raw codes from the hardware sim in batches (Section III-F)."""
-    outs = []
-    fn = jax.jit(
-        lambda a, k: counts_to_fv_raw(
-            tdfex_raw_counts(a, tdcfg, chip, k), tdcfg, beta, alpha
-        )
+    """Deprecated shim for the pre-registry API: record FV_Raw from the
+    hardware sim. Use ``KWSPipeline(KWSPipelineConfig(frontend="hardware",
+    ...)).record_features(audio, state)`` instead."""
+    from repro.core.frontend import hardware_state
+
+    cfg = KWSPipelineConfig(
+        frontend="hardware", fex=tdcfg.fex, tdfex=tdcfg
     )
-    n = audio.shape[0]
-    for i in range(0, n, batch_size):
-        chunk = jnp.asarray(audio[i : i + batch_size])
-        k = None
-        if key is not None:
-            key, k = jax.random.split(key)
-        outs.append(np.asarray(fn(chunk, k)))
-    return np.concatenate(outs, axis=0)
+    state = hardware_state(tdcfg, chip, beta=beta, alpha=alpha)
+    return KWSPipeline(cfg).record_features(
+        audio, state, key=key, batch_size=batch_size
+    )

@@ -45,6 +45,7 @@ __all__ = [
     "TDFExConfig",
     "TDFExState",
     "vtc",
+    "design_mismatched_filterbank",
     "rec_bpf",
     "sro_tdc",
     "tdfex_raw_counts",
@@ -146,29 +147,35 @@ def vtc(
     return y
 
 
-def rec_bpf(
-    duty: jnp.ndarray, cfg: TDFExConfig, chip: Optional[TDFExState] = None
-) -> jnp.ndarray:
-    """16-channel rectifying BPF: duty (B, T) -> rectified (B, T, C).
+def design_mismatched_filterbank(cfg: TDFExConfig, chip: Optional[TDFExState] = None):
+    """The (possibly mismatched) Rec-BPF filterbank for one simulated die.
 
     Center-frequency mismatch is applied by redesigning the per-channel
     biquad at f0*(1+eps) — the FLL bias error moves omega_0 per eq. (6).
+    Requires concrete (non-traced) mismatch values: the chip's filterbank
+    is fixed hardware, so design it once (e.g. at `FrontendState` build
+    time), not per forward pass.
     """
     fexc = cfg.fex
     if chip is None:
-        coeffs = fexc.filterbank()
-    else:
-        from repro.core.filters import design_bandpass_biquad
+        return fexc.filterbank()
+    from repro.core.filters import design_bandpass_biquad
 
-        f0 = np.asarray(
-            design_filterbank(
-                fexc.num_channels, fexc.fs_internal, fexc.f_lo, fexc.f_hi, fexc.q
-            ).f0
-        )
-        f0 = f0 * (1.0 + np.asarray(chip.cf_mismatch))
-        f0 = np.clip(f0, 10.0, fexc.fs_internal / 2 * 0.95)
-        coeffs = design_bandpass_biquad(f0, fs=fexc.fs_internal, q=fexc.q)
-    y = biquadfb = biquad_filterbank(duty, coeffs)
+    f0 = np.asarray(
+        design_filterbank(
+            fexc.num_channels, fexc.fs_internal, fexc.f_lo, fexc.f_hi, fexc.q
+        ).f0
+    )
+    f0 = f0 * (1.0 + np.asarray(chip.cf_mismatch))
+    f0 = np.clip(f0, 10.0, fexc.fs_internal / 2 * 0.95)
+    return design_bandpass_biquad(f0, fs=fexc.fs_internal, q=fexc.q)
+
+
+def rec_bpf(
+    duty: jnp.ndarray, cfg: TDFExConfig, chip: Optional[TDFExState] = None
+) -> jnp.ndarray:
+    """16-channel rectifying BPF: duty (B, T) -> rectified (B, T, C)."""
+    y = biquad_filterbank(duty, design_mismatched_filterbank(cfg, chip))
     # PFD-based FWR (Section III-C): UP + DN = |delta phi|.
     return jnp.abs(y)
 

@@ -8,6 +8,35 @@ interpret mode on CPU; BlockSpec layouts target TPU VMEM/MXU).
   wkv6      — state-resident RWKV6 recurrence (the §Perf cell-C lever)
 """
 
+from jax.experimental.pallas import tpu as _pltpu
+
+# --- version-compat shim -------------------------------------------------
+# jax renamed the Mosaic compiler-params dataclass across releases:
+# `pltpu.CompilerParams` (old) -> `pltpu.TPUCompilerParams` -> (newer
+# releases again) `pltpu.CompilerParams`. Resolve whichever this jax
+# provides once, here, so every kernel builds against one spelling.
+_TPU_COMPILER_PARAMS_CLS = getattr(
+    _pltpu, "TPUCompilerParams", None
+) or getattr(_pltpu, "CompilerParams", None)
+
+
+def tpu_compiler_params(**kwargs):
+    """Build a pallas TPU compiler-params object on any supported jax.
+
+    Unknown keyword arguments (fields removed in some jax versions) are
+    dropped rather than raised, so kernels can always pass their full
+    intent (e.g. ``dimension_semantics``).
+    """
+    if _TPU_COMPILER_PARAMS_CLS is None:  # pragma: no cover
+        return None
+    import dataclasses
+
+    if dataclasses.is_dataclass(_TPU_COMPILER_PARAMS_CLS):
+        fields = {f.name for f in dataclasses.fields(_TPU_COMPILER_PARAMS_CLS)}
+        kwargs = {k: v for k, v in kwargs.items() if k in fields}
+    return _TPU_COMPILER_PARAMS_CLS(**kwargs)
+
+
 from repro.kernels.fex_fused import fex_fused, fex_fused_ref
 from repro.kernels.gru import gru_sequence, gru_sequence_ref
 from repro.kernels.intgemm import intgemm, intgemm_ref
@@ -15,6 +44,7 @@ from repro.kernels.tdc import tdc_counts, tdc_counts_ref
 from repro.kernels.wkv6 import wkv6, wkv6_ref
 
 __all__ = [
+    "tpu_compiler_params",
     "fex_fused", "fex_fused_ref",
     "gru_sequence", "gru_sequence_ref",
     "intgemm", "intgemm_ref",

@@ -33,6 +33,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import tpu_compiler_params
+
 
 def _fex_fused_kernel(
     x_ref,  # (BB, FRAME) audio block at the internal rate
@@ -111,7 +113,7 @@ def fex_fused_pallas(
             pltpu.VMEM((block_batch, c), jnp.float32),
             pltpu.VMEM((block_batch, c), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

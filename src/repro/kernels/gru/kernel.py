@@ -26,6 +26,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import tpu_compiler_params
+
 
 def _gru_seq_kernel(
     x_ref,  # (1, BB, I) this step's input
@@ -100,7 +102,7 @@ def gru_sequence_pallas(
         ),
         out_shape=jax.ShapeDtypeStruct((t, b, h), xs.dtype),
         scratch_shapes=[pltpu.VMEM((block_batch, h), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -29,6 +29,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import tpu_compiler_params
+
 
 def _tdc_kernel(
     u_ref,  # (BB, S, C) rectified input, one frame of samples
@@ -114,7 +116,7 @@ def tdc_pallas(
         ),
         out_shape=jax.ShapeDtypeStruct((b, n_frames, c), jnp.float32),
         scratch_shapes=[pltpu.VMEM((block_batch, c), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

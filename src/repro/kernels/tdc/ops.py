@@ -1,4 +1,17 @@
-"""jit'd wrapper for the TDC kernel, config-aware."""
+"""Config-aware public entry point for the TDC kernel.
+
+`tdc_counts` picks one of three equivalent implementations per call:
+
+  * ``pallas``    — the compiled Mosaic kernel (TPU);
+  * ``interpret`` — the same kernel body run by the Pallas interpreter
+                    (validates kernel logic on CPU CI);
+  * ``reference`` — the pure-jnp cumsum/floor formulation of
+                    `repro.core.tdfex.sro_tdc` (fastest off-TPU, and the
+                    fallback for shapes the kernel does not tile well).
+
+Dispatch is automatic (backend + batch shape) unless forced via the
+``dispatch`` argument; the legacy ``interpret=`` flag is still honored.
+"""
 
 from __future__ import annotations
 
@@ -8,7 +21,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.tdfex import TDFExConfig, TDFExState
+from repro.core.tdfex import TDFExConfig, TDFExState, sro_tdc
 from repro.kernels.tdc.kernel import tdc_pallas
 
 
@@ -28,18 +41,46 @@ def _tdc_jit(u, f0_eff, k_eff, samples_per_frame, os, f_tdc, n_phases,
     )
 
 
+def resolve_tdc_dispatch(
+    batch: int,
+    dispatch: str = "auto",
+    interpret: Optional[bool] = None,
+) -> str:
+    """Resolve 'auto' to a concrete path for this backend + batch shape."""
+    if interpret is not None:  # legacy flag wins when given explicitly
+        return "interpret" if interpret else "pallas"
+    if dispatch != "auto":
+        if dispatch not in ("pallas", "interpret", "reference"):
+            raise ValueError(
+                f"unknown dispatch {dispatch!r}; "
+                "expected 'auto', 'pallas', 'interpret' or 'reference'"
+            )
+        return dispatch
+    if jax.default_backend() == "tpu":
+        return "pallas"
+    # Off-TPU, small batches run the kernel body under the Pallas
+    # interpreter (cheap, and it keeps CI validating the kernel logic);
+    # the interpreter is per-element slow, so large batches switch to
+    # the vectorized jnp reference for throughput.
+    return "interpret" if batch <= 8 else "reference"
+
+
 def tdc_counts(
     u: jnp.ndarray,  # (B, T, C) rectified @ fs_internal
     cfg: TDFExConfig,
     chip: Optional[TDFExState] = None,
     block_batch: Optional[int] = None,
     interpret: Optional[bool] = None,
+    dispatch: str = "auto",
 ) -> jnp.ndarray:
     """Config-level entry point: (B, T, C) -> (B, F, C) counts."""
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    b = u.shape[0]
+    path = resolve_tdc_dispatch(b, dispatch, interpret)
+    if path == "reference":
+        return sro_tdc(u, cfg, chip)
+    run_interpret = path == "interpret"
     if block_batch is None:
-        block_batch = 8 if interpret else 128
+        block_batch = 8 if run_interpret else 128
     c = u.shape[-1]
     gain = jnp.ones((c,), jnp.float32)
     if chip is not None:
@@ -47,7 +88,10 @@ def tdc_counts(
     f0_eff = cfg.f_free_hz * gain
     k_eff = cfg.k_sro_hz * gain
     samples_per_frame = cfg.decimation // cfg.tdc_oversample
-    b = u.shape[0]
+    # trim to whole frames (the reference path does the same inside its
+    # CIC decimation)
+    t_use = (u.shape[1] // samples_per_frame) * samples_per_frame
+    u = u[:, :t_use]
     pad = (-b) % block_batch
     if pad:
         u = jnp.concatenate(
@@ -55,6 +99,6 @@ def tdc_counts(
         )
     out = _tdc_jit(
         u, f0_eff, k_eff, samples_per_frame, cfg.tdc_oversample,
-        cfg.f_tdc, cfg.n_phases, block_batch, interpret,
+        cfg.f_tdc, cfg.n_phases, block_batch, run_interpret,
     )
     return out[:b]

@@ -26,6 +26,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import tpu_compiler_params
+
 
 def _wkv6_kernel(
     r_ref,  # (BB, 1, 1, P)
@@ -85,7 +87,7 @@ def wkv6_pallas(
         scratch_shapes=[
             pltpu.VMEM((block_batch, p, p), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -108,12 +108,14 @@ def run_cell(arch: str, shape: str, multi_pod: bool = False, note: str = "",
         arch_cfg, shape_spec, mesh_name, chips, compiled,
         shape_spec.kind, note=note,
     )
+    from repro.launch.roofline import cost_analysis_dict, peak_memory_bytes
+
     ma = compiled.memory_analysis()
-    ca = compiled.cost_analysis()
+    ca = cost_analysis_dict(compiled)
     print(
         f"[{arch} x {shape} @ {mesh_name}] lower {t_lower:.1f}s "
         f"compile {t_compile:.1f}s | peak/dev "
-        f"{ma.peak_memory_in_bytes / 1e9:.2f} GB, args "
+        f"{peak_memory_bytes(ma) / 1e9:.2f} GB, args "
         f"{ma.argument_size_in_bytes / 1e9:.2f} GB | "
         f"cost_analysis flops={ca.get('flops', 0):.3e} (while bodies "
         f"counted once) | parsed flops/dev {report.hlo_flops:.3e}"

@@ -27,7 +27,32 @@ import json
 import re
 from typing import Dict, List, Optional, Tuple
 
-__all__ = ["HARDWARE", "HLOAnalysis", "analyze_hlo", "CellReport", "make_report"]
+__all__ = [
+    "HARDWARE", "HLOAnalysis", "analyze_hlo", "CellReport", "make_report",
+    "peak_memory_bytes", "cost_analysis_dict",
+]
+
+
+def peak_memory_bytes(ma) -> float:
+    """Per-device peak bytes from a CompiledMemoryStats, across jax
+    versions: older jaxlibs drop `peak_memory_in_bytes`, in which case
+    args + outputs + temps is the standard approximation."""
+    pk = getattr(ma, "peak_memory_in_bytes", None)
+    if pk:
+        return float(pk)
+    return float(
+        ma.argument_size_in_bytes
+        + ma.output_size_in_bytes
+        + ma.temp_size_in_bytes
+    )
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """compiled.cost_analysis() as a dict (pre-0.5 jax returns [dict])."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        return ca[0] if ca else {}
+    return dict(ca)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -547,7 +572,7 @@ def make_report(
         useful_ratio=(
             mf / (analysis.flops * chips) if analysis.flops else 0.0
         ),
-        peak_bytes_per_device=float(ma.peak_memory_in_bytes),
+        peak_bytes_per_device=peak_memory_bytes(ma),
         arg_bytes_per_device=float(ma.argument_size_in_bytes),
         note=note,
         collective_breakdown=analysis.collective_breakdown,

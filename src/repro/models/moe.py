@@ -26,6 +26,11 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+try:  # jax >= 0.5 exposes shard_map at the top level
+    from jax import shard_map
+except ImportError:
+    from jax.experimental.shard_map import shard_map
+
 from repro.models.layers import dense_init, mlp_apply, mlp_init
 
 __all__ = ["MeshContext", "moe_init", "moe_apply", "padded_num_experts"]
@@ -378,7 +383,7 @@ def moe_apply(
                 return {"q": base, "s": P(*(list(base)[:-1] + [None]))}
             return base
 
-        y, aux = jax.shard_map(
+        y, aux = shard_map(
             shard_fn,
             mesh=mc.mesh,
             in_specs=(

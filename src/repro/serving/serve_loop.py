@@ -5,10 +5,15 @@ programs the dry-run compiles (batch of requests, KV cache / recurrent
 state sharded per distributed/sharding.py).
 
 KWS side: `StreamingKWSServer` — the deployment shape of the paper's
-chip: N concurrent audio streams, one 16 ms FV per stream per frame, a
-batched weights-resident GRU step, per-stream argmax + exponential score
-smoothing. This is the serve-side example driver (examples/
-serve_streaming.py).
+chip: N concurrent audio streams, one tick per 16 ms frame, a batched
+weights-resident GRU step, per-stream argmax + exponential score
+smoothing. Each tick accepts, per stream, EITHER a precomputed FV_Norm
+frame (C,) OR a raw 16 ms audio hop (`pipeline.chunk_samples` samples at
+fs_audio); raw audio is pushed through the pipeline's registered
+`FeatureFrontend` (software / hardware-sim / Pallas TDC) with per-stream
+filter + SRO-phase carry, so the server is end-to-end audio-in,
+posteriors-out. This is the serve-side example driver
+(examples/serve_streaming.py).
 """
 
 from __future__ import annotations
@@ -153,19 +158,28 @@ class StreamState:
 class StreamingKWSServer:
     """Batched frame-synchronous KWS over N concurrent audio streams.
 
-    Each frame tick: callers push one FV_Norm (C,) per active stream; the
-    server runs ONE batched GRU step for all of them (the accelerator's
-    Fig. 4 timing, vectorized across streams) and returns per-stream
-    smoothed posteriors + argmax.
+    Each frame tick: callers push, per active stream, either one FV_Norm
+    (C,) or one raw 16 ms audio hop (`pipeline.chunk_samples` samples at
+    fs_audio) — the kinds may not be mixed within one tick. Raw audio is
+    converted by the pipeline's registered frontend with per-stream
+    filter/SRO carry; then the server runs ONE batched GRU step for all
+    streams (the accelerator's Fig. 4 timing, vectorized across streams)
+    and returns per-stream smoothed posteriors + argmax.
     """
 
     def __init__(self, pipeline, params, max_streams: int = 256,
-                 smoothing: float = 0.7):
+                 smoothing: float = 0.7, state=None):
         self.pipeline = pipeline
         self.params = params
         self.max_streams = max_streams
         self.smoothing = smoothing
+        # frontend state (norm stats / calibration); default = the
+        # pipeline's bound state
+        self.frontend_state = (
+            pipeline.state if state is None else state
+        )
         self.states = pipeline.streaming_init(max_streams)
+        self.feat_carry = pipeline.streaming_features_init(max_streams)
         self.active: Dict[int, int] = {}  # stream_id -> slot
         self.scores = np.zeros(
             (max_streams, pipeline.config.gru.num_classes), np.float32
@@ -179,18 +193,62 @@ class StreamingKWSServer:
         self.active[stream_id] = slot
         for i, h in enumerate(self.states):
             self.states[i] = h.at[slot].set(0.0)
+        self.feat_carry = jax.tree_util.tree_map(
+            lambda t: t.at[slot].set(0.0), self.feat_carry
+        )
         self.scores[slot] = 0.0
 
     def close_stream(self, stream_id: int):
         slot = self.active.pop(stream_id)
         self._free.append(slot)
 
+    def _features_tick(self, chunks: Dict[int, np.ndarray]) -> np.ndarray:
+        """Raw audio hops -> FV_Norm frames via the frontend (batched).
+
+        The per-stream filter/SRO carry advances only for streams that
+        submitted audio this tick — a stream skipping a tick resumes
+        from its own contiguous state, not from a fabricated silent hop.
+        """
+        s = self.pipeline.chunk_samples
+        audio = np.zeros((self.max_streams, s), np.float32)
+        mask = np.zeros((self.max_streams,), bool)
+        for sid, chunk in chunks.items():
+            audio[self.active[sid]] = chunk
+            mask[self.active[sid]] = True
+        new_carry, fv = self.pipeline.streaming_features_step(
+            self.feat_carry, jnp.asarray(audio), self.frontend_state
+        )
+        m = jnp.asarray(mask)[:, None]
+        self.feat_carry = jax.tree_util.tree_map(
+            lambda new, old: jnp.where(m, new, old),
+            new_carry, self.feat_carry,
+        )
+        return np.asarray(fv)
+
     def step(self, frames: Dict[int, np.ndarray]) -> Dict[int, dict]:
-        """frames: stream_id -> FV_Norm (C,). One 16 ms tick."""
+        """frames: stream_id -> FV_Norm (C,) or raw audio hop (S,).
+
+        One 16 ms tick. Inputs are raw audio when their trailing dim is
+        `pipeline.chunk_samples` (e.g. 256 @ 16 kHz), FV_Norm when it is
+        `fex.num_channels` (e.g. 16) — the two never collide for the
+        paper's geometry."""
         c = self.pipeline.config.fex.num_channels
-        fv = np.zeros((self.max_streams, c), np.float32)
-        for sid, frame in frames.items():
-            fv[self.active[sid]] = frame
+        hop = self.pipeline.chunk_samples
+        dim = next(iter(frames.values())).shape[-1] if frames else c
+        if dim == hop:
+            fv_all = self._features_tick(frames)
+            fv = np.zeros((self.max_streams, c), np.float32)
+            for sid in frames:
+                fv[self.active[sid]] = fv_all[self.active[sid]]
+        elif dim == c:
+            fv = np.zeros((self.max_streams, c), np.float32)
+            for sid, frame in frames.items():
+                fv[self.active[sid]] = frame
+        else:
+            raise ValueError(
+                f"per-stream input must be an FV_Norm frame ({c},) or a "
+                f"raw audio hop ({hop},); got trailing dim {dim}"
+            )
         self.states, logits = self.pipeline.streaming_step(
             self.params, self.states, jnp.asarray(fv)
         )

@@ -1,6 +1,7 @@
 """Synthetic GSCD corpus: shapes, balance, determinism, separability."""
 
 import numpy as np
+import pytest
 
 from repro.data.gscd import (
     CLASSES,
@@ -62,6 +63,7 @@ def test_batch_iterator():
     assert batches[0]["audio"].shape == (16, 16000)
 
 
+@pytest.mark.slow
 def test_classes_spectrally_separable():
     """Mean spectra of two different keywords should differ clearly —
     the dataset must carry class information for the KWS task."""

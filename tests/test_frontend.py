@@ -1,0 +1,259 @@
+"""FeatureFrontend registry: three-way parity, streaming, serving e2e.
+
+The paper's claim is that the time-domain FEx is a drop-in replacement
+for a voltage-domain FEx: with mismatch and noise off and nominal
+beta/alpha calibration, all registered frontends must produce the same
+FV_Raw codes up to quantization granularity (the TDC counts in ~0.2-LSB
+steps, the software quantizer in 1-LSB steps)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quant
+from repro.core.fex import fit_norm_stats
+from repro.core.frontend import (
+    FrontendState,
+    available_frontends,
+    get_frontend,
+)
+from repro.core.pipeline import KWSPipeline, KWSPipelineConfig
+from repro.core.tdfex import TDFExConfig
+from repro.serving.serve_loop import StreamingKWSServer
+
+ALL_FRONTENDS = ("software", "hardware", "hardware-pallas")
+
+
+def _audio(batch=3, samples=4096, seed=0, amp=0.05):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(
+        rng.standard_normal((batch, samples)).astype(np.float32) * amp
+    )
+
+
+def _nominal_state(tdcfg: TDFExConfig) -> FrontendState:
+    """Ideal calibration: nominal beta, unity alpha, no mismatch draw."""
+    c = tdcfg.fex.num_channels
+    return FrontendState(
+        beta=jnp.full((c,), tdcfg.beta_nominal, jnp.float32),
+        alpha=jnp.ones((c,), jnp.float32),
+    )
+
+
+# --------------------------------------------------------------------------
+# registry
+# --------------------------------------------------------------------------
+
+def test_registry_contains_all_paths():
+    assert set(ALL_FRONTENDS) <= set(available_frontends())
+    for name in ALL_FRONTENDS:
+        assert get_frontend(name).name == name
+
+
+def test_unknown_frontend_raises_with_listing():
+    with pytest.raises(KeyError) as err:
+        get_frontend("does-not-exist")
+    msg = str(err.value)
+    for name in ALL_FRONTENDS:
+        assert name in msg
+
+
+def test_pipeline_rejects_unknown_frontend():
+    with pytest.raises(KeyError) as err:
+        KWSPipeline(KWSPipelineConfig(frontend="nope"))
+    assert "software" in str(err.value)
+
+
+# --------------------------------------------------------------------------
+# three-way FV_Raw parity (mismatch off, noise off, nominal calibration)
+# --------------------------------------------------------------------------
+
+def test_three_way_raw_code_parity():
+    audio = _audio()
+    state = _nominal_state(TDFExConfig())
+    raws = {}
+    for name in ALL_FRONTENDS:
+        pipe = KWSPipeline(
+            KWSPipelineConfig(frontend=name, use_norm=False)
+        )
+        fv, raw = pipe.features(audio, state)
+        assert raw.shape == fv.shape
+        raws[name] = np.asarray(raw)
+    # software vs hardware sim: same signal chain up to TDC counting
+    d_hw = np.abs(raws["hardware"] - raws["software"])
+    assert d_hw.max() <= 2.0, f"hw vs sw max diff {d_hw.max()} LSB"
+    # hardware sim vs the Pallas TDC kernel (interpret mode on CPU for
+    # this batch shape): identical math, fractional-carry formulation
+    d_pl = np.abs(raws["hardware-pallas"] - raws["hardware"])
+    assert d_pl.max() <= 2.0, f"pallas vs hw max diff {d_pl.max()} LSB"
+
+
+def test_one_call_site_for_all_frontends():
+    """The acceptance-criterion shape: one loop, one call signature."""
+    audio = _audio(batch=2, samples=2048)
+    for name in available_frontends():
+        pipe = KWSPipeline(
+            KWSPipelineConfig(frontend=name, use_norm=False)
+        )
+        state = pipe.init_frontend_state(mismatch=False)
+        fv, raw = pipe.features(audio, state)
+        assert fv.shape == raw.shape == (2, 8, 16)
+
+
+def test_hardware_state_calibration_fields():
+    pipe = KWSPipeline(KWSPipelineConfig(frontend="hardware"))
+    state = pipe.init_frontend_state(jax.random.PRNGKey(0))
+    assert state.chip is not None  # mismatch drawn by default with a key
+    assert state.beta.shape == (16,) and state.alpha.shape == (16,)
+    assert state.coeffs.shape == (5, 16)
+    # mismatch off -> ideal chip, but calibration still measured
+    ideal = pipe.init_frontend_state(mismatch=False)
+    assert ideal.chip is None
+    np.testing.assert_allclose(
+        np.asarray(ideal.alpha).mean(), 1.0, rtol=1e-5
+    )
+
+
+# --------------------------------------------------------------------------
+# streaming features
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["software", "hardware"])
+def test_streaming_features_match_batch(name):
+    audio = _audio()
+    cfg = KWSPipelineConfig(frontend=name, use_norm=False)
+    pipe = KWSPipeline(cfg, state=_nominal_state(cfg.tdfex_config))
+    _, raw_batch = pipe.features(audio)
+
+    fe = pipe.frontend
+    carry = pipe.streaming_features_init(audio.shape[0])
+    hop = pipe.chunk_samples
+    frames = []
+    for t in range(audio.shape[1] // hop):
+        carry, codes = fe.streaming_step(
+            audio[:, t * hop : (t + 1) * hop], cfg, pipe.state, carry
+        )
+        frames.append(np.asarray(codes))
+    raw_stream = np.stack(frames, axis=1)
+    assert raw_stream.shape == raw_batch.shape
+    # chunk-edge oversampler approximation + TDC count granularity
+    d = np.abs(raw_stream - np.asarray(raw_batch))
+    assert d.max() <= 2.0, f"streaming vs batch max diff {d.max()} LSB"
+
+
+def test_streaming_features_step_normalized_output():
+    audio = _audio()
+    boot = KWSPipeline(KWSPipelineConfig(use_norm=False))
+    _, raw = boot.features(audio)
+    stats = fit_norm_stats(quant.log_compress_lut(raw, 12, 10))
+    pipe = KWSPipeline(KWSPipelineConfig(), norm_stats=stats)
+    fv_batch, _ = pipe.features(audio)
+    carry = pipe.streaming_features_init(audio.shape[0])
+    hop = pipe.chunk_samples
+    outs = []
+    for t in range(audio.shape[1] // hop):
+        carry, fv = pipe.streaming_features_step(
+            carry, audio[:, t * hop : (t + 1) * hop]
+        )
+        outs.append(np.asarray(fv))
+    stream = np.stack(outs, axis=1)
+    # 1-LSB raw-code differences map through log LUT + 1/sigma
+    np.testing.assert_allclose(
+        stream, np.asarray(fv_batch), atol=0.5
+    )
+
+
+# --------------------------------------------------------------------------
+# serving e2e: raw audio in, posteriors out
+# --------------------------------------------------------------------------
+
+def _server(frontend="software", max_streams=4):
+    audio = _audio(batch=2, samples=16000, seed=5)
+    boot = KWSPipeline(KWSPipelineConfig(use_norm=False))
+    _, raw = boot.features(audio)
+    stats = fit_norm_stats(quant.log_compress_lut(raw, 12, 10))
+    cfg = KWSPipelineConfig(frontend=frontend)
+    pipe = KWSPipeline(
+        cfg, state=_nominal_state(cfg.tdfex_config).with_norm_stats(stats)
+    )
+    params = pipe.init_params(jax.random.PRNGKey(0))
+    return pipe, StreamingKWSServer(pipe, params, max_streams=max_streams)
+
+
+@pytest.mark.parametrize("frontend", ["software", "hardware"])
+def test_server_accepts_raw_audio_chunks(frontend):
+    pipe, srv = _server(frontend)
+    srv.open_stream(7)
+    srv.open_stream(9)
+    hop = pipe.chunk_samples
+    rng = np.random.default_rng(0)
+    for _ in range(4):
+        chunks = {
+            7: rng.standard_normal(hop).astype(np.float32) * 0.05,
+            9: rng.standard_normal(hop).astype(np.float32) * 0.05,
+        }
+        out = srv.step(chunks)
+    assert set(out) == {7, 9}
+    for r in out.values():
+        assert r["probs"].shape == (pipe.config.gru.num_classes,)
+        np.testing.assert_allclose(
+            r["probs"].sum(), 1.0 - srv.smoothing**4, atol=1e-5
+        )
+
+
+def test_server_carry_only_advances_for_submitting_streams():
+    """A stream that skips a raw-audio tick must resume from its own
+    contiguous filter/SRO carry, not one advanced over fabricated
+    silence."""
+    pipe, srv = _server()
+    srv.open_stream(1)
+    srv.open_stream(2)
+    hop = pipe.chunk_samples
+    rng = np.random.default_rng(3)
+    chunk = rng.standard_normal(hop).astype(np.float32) * 0.05
+    srv.step({1: chunk, 2: chunk})
+    before = jax.tree_util.tree_map(
+        lambda t: np.asarray(t[srv.active[2]]), srv.feat_carry
+    )
+    srv.step({1: chunk})  # stream 2 skips this tick
+    after = jax.tree_util.tree_map(
+        lambda t: np.asarray(t[srv.active[2]]), srv.feat_carry
+    )
+    jax.tree_util.tree_map(np.testing.assert_array_equal, before, after)
+
+
+def test_server_rejects_wrong_length_input():
+    pipe, srv = _server()
+    srv.open_stream(1)
+    with pytest.raises(ValueError, match="FV_Norm frame"):
+        srv.step({1: np.zeros(100, np.float32)})
+
+
+def test_server_still_accepts_fv_frames():
+    pipe, srv = _server()
+    srv.open_stream(1)
+    out = srv.step({1: np.ones(16, np.float32)})
+    assert set(out) == {1}
+
+
+def test_server_audio_matches_offline_features():
+    """An audio-fed server equals a feature-fed server whose FV_Norm
+    frames came from the batch `features` path, within the documented
+    streaming tolerance."""
+    pipe, srv_audio = _server()
+    _, srv_fv = _server()
+    srv_fv.params = srv_audio.params  # identical weights
+    audio = _audio(batch=1, samples=2048, seed=11)
+    fv_batch = np.asarray(pipe.features(audio)[0])
+    srv_audio.open_stream(0)
+    srv_fv.open_stream(0)
+    hop = pipe.chunk_samples
+    for t in range(audio.shape[1] // hop):
+        out_a = srv_audio.step(
+            {0: np.asarray(audio[0, t * hop : (t + 1) * hop])}
+        )
+        out_f = srv_fv.step({0: fv_batch[0, t]})
+    np.testing.assert_allclose(
+        out_a[0]["probs"], out_f[0]["probs"], atol=0.02
+    )

@@ -12,6 +12,10 @@ import pytest
 from repro.configs import SHAPES, get_config, list_archs
 from repro.models.registry import get_backbone
 
+# Full-architecture forward/backward smokes dominate suite wall-clock;
+# `pytest -m "not slow"` keeps the pre-commit loop fast.
+pytestmark = pytest.mark.slow
+
 ARCHS = list_archs()
 
 

@@ -33,7 +33,9 @@ def test_cost_analysis_undercounts_scan_and_we_dont():
     n, dim = 5, 64
     compiled = _compile_scan(n, dim)
     per_step = 2 * 8 * dim * dim
-    ca_flops = compiled.cost_analysis().get("flops", 0)
+    from repro.launch.roofline import cost_analysis_dict
+
+    ca_flops = cost_analysis_dict(compiled).get("flops", 0)
     assert ca_flops < 2 * per_step  # body counted ~once
     ours = analyze_hlo(compiled.as_text()).flops
     assert abs(ours - n * per_step) / (n * per_step) < 0.01

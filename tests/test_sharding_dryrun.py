@@ -31,6 +31,10 @@ sys.path.insert(0, "src")
 import dataclasses
 import jax, jax.numpy as jnp
 import numpy as np
+try:
+    from jax import shard_map
+except ImportError:
+    from jax.experimental.shard_map import shard_map
 """
 
 
@@ -115,7 +119,7 @@ def sync(g_shard, r_shard):
         {"w": g_shard[0]}, {"w": r_shard[0]}, "data")
     return g["w"], r["w"][None]
 
-out, new_r = jax.shard_map(
+out, new_r = shard_map(
     sync, mesh=mesh,
     in_specs=(P("data", None, None), P("data", None, None)),
     out_specs=(P(None, None), P("data", None, None)),
