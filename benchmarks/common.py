@@ -157,6 +157,46 @@ def evaluate(model: Dict, feats: np.ndarray, labels: np.ndarray,
     return acc, conf
 
 
+def percentile_stats(latencies_s) -> Dict[str, float]:
+    """Per-tick latency list (seconds) -> p50/p99/mean in milliseconds.
+
+    This is the shared latency summary of the serving benchmarks; the
+    field names match what `benchmarks/serve_load.py` writes to
+    ``BENCH_serve.json``:
+
+      backend        jax backend the sweep ran on ("cpu" / "tpu" / ...)
+      frontend       registered FeatureFrontend of the benched pipeline
+      quick          True when the quick (CI-sized) sweep ran
+      results[]      one entry per (mode, kind, max_streams, occupancy):
+        mode           "fused" (one jitted tick per step_batch call),
+                       "legacy" (pre-refactor per-stream path), or
+                       "scan" (run_batch lax.scan replay; per-tick
+                       latency is amortized over the scanned program)
+        kind           tick payload: "fv" = precomputed FV_Norm frames
+                       (isolates serving-path overhead), "audio" = raw
+                       16 ms hops (adds the frontend filter scan, a
+                       cost shared by every mode)
+        max_streams    server slot capacity for the point
+        occupancy      fraction of slots with an open, submitting stream
+        active_streams occupancy * max_streams, rounded, >= 1
+        n_ticks        measured ticks (after warmup)
+        ticks_per_s    sustained tick throughput, 1 / mean(latency)
+        streams_per_s  ticks_per_s * active_streams (stream-frames/sec)
+        p50_ms/p99_ms  per-tick wall latency percentiles
+        mean_ms        mean per-tick wall latency
+      claim          the checked headline ("ok" bool): sustained
+                     fused-tick throughput (scan driver) >= 5x legacy
+                     ticks/sec at 256 streams, full occupancy, fv kind;
+                     "speedup_live" carries the per-call fused ratio
+    """
+    lat = np.asarray(latencies_s, np.float64) * 1e3
+    return {
+        "p50_ms": float(np.percentile(lat, 50)),
+        "p99_ms": float(np.percentile(lat, 99)),
+        "mean_ms": float(lat.mean()),
+    }
+
+
 def timed(name):
     class _T:
         def __enter__(self):

@@ -14,6 +14,7 @@ def main():
         fig18_audio,
         fig19_accuracy,
         fig20_snr,
+        serve_load,
         table1_fom,
         table2_system,
         roofline_bench,
@@ -29,6 +30,7 @@ def main():
         ("fig19_accuracy", fig19_accuracy),
         ("fig20_snr", fig20_snr),
         ("roofline", roofline_bench),
+        ("serve_load", serve_load),
     ]
     results = {}
     t0 = time.time()

@@ -5,10 +5,13 @@ weights-resident GRU step per 16 ms frame — the chip's deployment shape
 The server consumes RAW 16 ms audio hops per stream: feature extraction
 runs inside the tick through the pipeline's registered frontend
 (--frontend software|hardware|hardware-pallas), with per-stream filter
-and SRO-phase carry.
+and SRO-phase carry. The whole tick (frontend + GRU + softmax +
+smoothing) is one fused jit over donated state buffers; --offline
+replays each stream's full buffered audio through the server's
+`lax.scan` driver instead of live per-tick calls.
 
   PYTHONPATH=src python examples/serve_streaming.py [--streams 32]
-      [--frontend software]
+      [--frontend software] [--offline]
 """
 
 import argparse
@@ -34,6 +37,9 @@ def main():
     ap.add_argument("--seconds", type=float, default=1.0)
     ap.add_argument("--frontend", default="software",
                     choices=["software", "hardware", "hardware-pallas"])
+    ap.add_argument("--offline", action="store_true",
+                    help="replay buffered audio via the lax.scan driver "
+                         "(server.run) instead of live per-tick step calls")
     args = ap.parse_args()
 
     # corpus + norm stats + a model (random weights for the demo)
@@ -61,17 +67,24 @@ def main():
 
     hop = pipe.chunk_samples  # 256 samples = 16 ms @ 16 kHz
     n_frames = min(audio.shape[1] // hop, int(args.seconds / 16e-3))
+    mode = "offline lax.scan replay" if args.offline else "live fused ticks"
     print(f"serving {args.streams} streams x {n_frames} raw-audio hops "
           f"({hop} samples / 16 ms each) via frontend "
-          f"{args.frontend!r}...")
+          f"{args.frontend!r} [{mode}]...")
     t0 = time.time()
     detections = {}
-    for t in range(n_frames):
-        chunk = {sid: audio[sid, t * hop:(t + 1) * hop]
-                 for sid in range(args.streams)}
-        out = srv.step(chunk)
+    if args.offline:
+        out = srv.run({sid: audio[sid, : n_frames * hop]
+                       for sid in range(args.streams)})
         for sid, r in out.items():
             detections[sid] = r["top"]
+    else:
+        for t in range(n_frames):
+            chunk = {sid: audio[sid, t * hop:(t + 1) * hop]
+                     for sid in range(args.streams)}
+            out = srv.step(chunk)
+            for sid, r in out.items():
+                detections[sid] = r["top"]
     wall = time.time() - t0
     per_frame = wall / n_frames * 1e3
     rt_streams = args.streams * (16.0 / per_frame)

@@ -32,6 +32,7 @@ __all__ = [
     "oversample2x",
     "biquad_filterbank",
     "biquad_filterbank_streaming",
+    "biquad_filterbank_frame_mean",
     "full_wave_rectify",
     "frame_average",
     "fex_frames",
@@ -133,6 +134,44 @@ def biquad_filterbank_streaming(
         )
     state, ys = jax.lax.scan(step, state, jnp.moveaxis(x, -1, 0))  # (T, B, C)
     return jnp.moveaxis(ys, 0, -2), state
+
+
+def biquad_filterbank_frame_mean(
+    x: jnp.ndarray,
+    coeffs,
+    state: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    """`biquad_filterbank_streaming` + |.| + frame mean, fused in-scan.
+
+    x is ONE frame of internal-rate samples (B, frame_len). The rectified
+    mean is accumulated inside the filter scan instead of materializing
+    the (B, T, C) filter output and reducing it afterwards — the serving
+    tick's hot path, where per-tick HBM traffic and scan-output stacking
+    dominate. Returns (mean_abs (B, C), new_state). Matches
+    ``abs(streaming output).mean(-2)`` up to float summation order.
+    """
+    b0, b1, b2, a1, a2 = _coeff_rows(coeffs, x.dtype)
+    bsz, t = x.shape
+    c = b0.shape[-1]
+    if state is None:
+        state = (
+            jnp.zeros((bsz, c), dtype=x.dtype),
+            jnp.zeros((bsz, c), dtype=x.dtype),
+        )
+
+    def step(carry, x_t):
+        s1, s2, acc = carry
+        xc = x_t[:, None]  # (B, 1)
+        y = b0 * xc + s1
+        s1_new = b1 * xc - a1 * y + s2
+        s2_new = b2 * xc - a2 * y
+        return (s1_new, s2_new, acc + jnp.abs(y)), None
+
+    acc0 = jnp.zeros((bsz, c), dtype=x.dtype)
+    (s1, s2, acc), _ = jax.lax.scan(
+        step, (state[0], state[1], acc0), jnp.moveaxis(x, -1, 0)
+    )
+    return acc / t, (s1, s2)
 
 
 def biquad_filterbank(x: jnp.ndarray, coeffs) -> jnp.ndarray:

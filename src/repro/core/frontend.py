@@ -45,6 +45,7 @@ import jax.numpy as jnp
 from repro.core import quant
 from repro.core.fex import (
     FExNormStats,
+    biquad_filterbank_frame_mean,
     biquad_filterbank_streaming,
     fex_frames,
     frame_average,
@@ -67,10 +68,29 @@ __all__ = [
     "get_frontend",
     "available_frontends",
     "hardware_state",
+    "masked_select",
     "SoftwareFrontend",
     "HardwareFrontend",
     "HardwarePallasFrontend",
 ]
+
+
+def masked_select(mask: jnp.ndarray, new_tree: Any, old_tree: Any) -> Any:
+    """Per-stream pytree select: leaves lead with the stream axis, and
+    stream ``i`` takes ``new`` where ``mask[i]`` else keeps ``old``.
+
+    This is how a batched streaming carry (or GRU state / score buffer)
+    advances only for streams that submitted a frame this tick — the
+    temporal-sparsity contract of frame-synchronous serving: an idle
+    stream's state must be bit-identical before and after the tick.
+    """
+    mask = jnp.asarray(mask)
+
+    def sel(new, old):
+        m = mask.reshape(mask.shape + (1,) * (new.ndim - mask.ndim))
+        return jnp.where(m, new, old)
+
+    return jax.tree_util.tree_map(sel, new_tree, old_tree)
 
 
 # --------------------------------------------------------------------------
@@ -304,17 +324,20 @@ class SoftwareFrontend(FeatureFrontend):
 
     def streaming_init(self, cfg, batch):
         c = cfg.fex.num_channels
-        z = jnp.zeros((batch, c), jnp.float32)
-        return {"s1": z, "s2": z}
+        # distinct buffers per leaf: the serving tick donates the whole
+        # carry, and a shared zeros buffer cannot be donated twice
+        z = lambda: jnp.zeros((batch, c), jnp.float32)  # noqa: E731
+        return {"s1": z(), "s2": z()}
 
     def streaming_step(self, chunk, cfg, state, carry, key=None):
         del key
         fexc = cfg.fex
         x = _chunk_to_internal(chunk, fexc)
-        y, (s1, s2) = biquad_filterbank_streaming(
+        # in-scan rectified mean: the serving tick's hot path never
+        # materializes the (B, frame_len, C) filter output
+        frame, (s1, s2) = biquad_filterbank_frame_mean(
             x, _nominal_coeffs(cfg, state), (carry["s1"], carry["s2"])
         )
-        frame = jnp.abs(y).mean(axis=-2)  # (B, C)
         codes = quant.quantize_unsigned(
             frame, fexc.quant_bits, fexc.quant_full_scale
         )
@@ -393,11 +416,12 @@ class _HardwareBase(FeatureFrontend):
 
     def streaming_init(self, cfg, batch):
         c = cfg.fex.num_channels
-        z = jnp.zeros((batch, c), jnp.float32)
+        # distinct buffers per leaf (donation-safe, see SoftwareFrontend)
+        z = lambda: jnp.zeros((batch, c), jnp.float32)  # noqa: E731
         # r: fractional phase carry of the 15-phase counter (counts);
         # j: the previous frame-edge phase jitter (counts), so keyed
         # streaming reproduces the batch path's SRO phase noise.
-        return {"s1": z, "s2": z, "r": z, "j": z}
+        return {"s1": z(), "s2": z(), "r": z(), "j": z()}
 
     def streaming_step(self, chunk, cfg, state, carry, key=None):
         tdcfg = cfg.tdfex_config

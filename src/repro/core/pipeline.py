@@ -261,6 +261,28 @@ class KWSPipeline:
         """Frontend carry (filter / SRO phase state) for batch streams."""
         return self.frontend.streaming_init(self.config, batch)
 
+    def streaming_features_apply(
+        self,
+        carry,
+        chunk: jnp.ndarray,
+        state: FrontendState,
+        key: Optional[jax.Array] = None,
+    ):
+        """Pure (unjitted) body of `streaming_features_step`: one raw
+        hop (B, chunk_samples) -> (carry, fv_norm (B, C)). Safe to call
+        from inside a larger jit — the fused serving tick
+        (`repro.serving.serve_loop`) inlines it so frontend + classifier
+        + smoothing compile as one program."""
+        carry, fv_raw = self.frontend.streaming_step(
+            chunk, self.config, state, carry, key=key
+        )
+        fv_norm = self._postprocess(fv_raw[:, None, :], state)[:, 0, :]
+        return carry, fv_norm
+
+    def streaming_logits_apply(self, params, states, fv_t: jnp.ndarray):
+        """Pure (unjitted) body of `streaming_step`, for fusing callers."""
+        return gru_classifier_step(params, states, fv_t, self.config.gru)
+
     @functools.partial(jax.jit, static_argnums=(0,))
     def _sfeatures_jit(self, carry, chunk, state, key):
         carry, fv_raw = self.frontend.streaming_step(

@@ -11,6 +11,13 @@
 
 Dispatch is automatic (backend + batch shape) unless forced via the
 ``dispatch`` argument; the legacy ``interpret=`` flag is still honored.
+
+`tdc_counts` is trace-aware: batch shapes are static under tracing, so
+dispatch resolves the same way inside an outer jit (e.g. the fused
+serving tick of `repro.serving.serve_loop` or `KWSPipeline.features`)
+as at the top level — but when already inside a trace it inlines the
+kernel call instead of nesting another `jax.jit`, so the caller's
+program keeps a single jaxpr with no inner call boundary.
 """
 
 from __future__ import annotations
@@ -97,8 +104,19 @@ def tdc_counts(
         u = jnp.concatenate(
             [u, jnp.zeros((pad,) + u.shape[1:], u.dtype)], axis=0
         )
-    out = _tdc_jit(
-        u, f0_eff, k_eff, samples_per_frame, cfg.tdc_oversample,
-        cfg.f_tdc, cfg.n_phases, block_batch, run_interpret,
-    )
+    if jax.core.trace_state_clean():
+        out = _tdc_jit(
+            u, f0_eff, k_eff, samples_per_frame, cfg.tdc_oversample,
+            cfg.f_tdc, cfg.n_phases, block_batch, run_interpret,
+        )
+    else:
+        # already under an outer trace: inline the kernel call so the
+        # caller's jit compiles one program (no nested-jit boundary)
+        out = tdc_pallas(
+            u, f0_eff, k_eff,
+            samples_per_frame=samples_per_frame,
+            os=cfg.tdc_oversample, f_tdc=cfg.f_tdc,
+            n_phases=cfg.n_phases, block_batch=block_batch,
+            interpret=run_interpret,
+        )
     return out[:b]
