@@ -14,16 +14,31 @@ fs_audio); raw audio is pushed through the pipeline's registered
 filter + SRO-phase carry, so the server is end-to-end audio-in,
 posteriors-out. This is the serve-side example driver
 (examples/serve_streaming.py).
+
+The whole per-tick device program is ONE fused jit (`_fused_tick`):
+frontend feature extraction, the batched GRU step, softmax, and
+exponential score smoothing run back-to-back on-device over donated
+state buffers, under a per-stream submitted mask. State — GRU hidden
+states, frontend carry, smoothed scores — lives in a single
+`ServerState` pytree; an idle stream's slice of every buffer is
+bit-identical across a tick it did not submit to (temporal sparsity,
+the DeltaKWS deployment contract). `open_stream`/`close_stream` recycle
+slots from a free list, zeroing only the reused slot, and
+`StreamingKWSServer.run` replays buffered audio through a `lax.scan`
+over the same tick body for offline-throughput serving.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional
+import functools
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core.frontend import masked_select
 
 from repro.distributed.sharding import (
     ShardingRules,
@@ -149,10 +164,78 @@ def lower_prefill(arch_cfg, rules: ShardingRules, shape_spec):
 # Streaming KWS serving (the paper's own deployment shape)
 # --------------------------------------------------------------------------
 
+@dataclasses.dataclass(frozen=True)
+class ServerState:
+    """All per-slot device state of a `StreamingKWSServer`, as one pytree.
+
+    gru    — per-layer GRU hidden states, each (max_streams, H).
+    carry  — frontend streaming carry (filter / SRO-phase state), a dict
+             of (max_streams, ...) arrays from `streaming_features_init`.
+    scores — exponentially smoothed posteriors, (max_streams, K).
+
+    The pytree crosses jit as a single donated argument: every tick
+    consumes the old state buffers and writes the new ones in place
+    (donation), so steady-state serving allocates nothing per tick.
+    """
+
+    gru: Tuple[jnp.ndarray, ...]
+    carry: Any
+    scores: jnp.ndarray
+
+
+try:
+    jax.tree_util.register_dataclass(
+        ServerState, data_fields=["gru", "carry", "scores"], meta_fields=[]
+    )
+except (AttributeError, TypeError):  # very old jax — manual fallback
+    jax.tree_util.register_pytree_node(
+        ServerState,
+        lambda s: ((s.gru, s.carry, s.scores), None),
+        lambda _, xs: ServerState(*xs),
+    )
+
+
+# kept importable for API compatibility with the pre-fused server
 @dataclasses.dataclass
 class StreamState:
     stream_id: int
     scores: Optional[np.ndarray] = None  # smoothed class scores
+
+
+def _fused_tick(pipeline, raw_audio, params, state: ServerState, inp,
+                mask, frontend_state, smoothing):
+    """One fully fused serving tick, traced as a single device program.
+
+    inp is a raw-audio slab (N, chunk_samples) when ``raw_audio`` else an
+    FV_Norm slab (N, C); mask (N,) bool marks slots that submitted this
+    tick. Frontend carry, GRU states, and smoothed scores advance ONLY
+    under the mask — an idle slot's slice of every buffer is returned
+    bit-identical (jnp.where keeps the old value), so a stream skipping
+    a tick resumes from its own contiguous state.
+    """
+    if raw_audio:
+        new_carry, fv = pipeline.streaming_features_apply(
+            state.carry, inp, frontend_state
+        )
+        carry = masked_select(mask, new_carry, state.carry)
+    else:
+        carry = state.carry
+        fv = inp
+    new_gru, logits = pipeline.streaming_logits_apply(
+        params, list(state.gru), fv
+    )
+    gru = tuple(masked_select(mask, tuple(new_gru), state.gru))
+    probs = jax.nn.softmax(logits, axis=-1)
+    smoothed = smoothing * state.scores + (1.0 - smoothing) * probs
+    scores = masked_select(mask, smoothed, state.scores)
+    top = jnp.argmax(scores, axis=-1)
+    return ServerState(gru=gru, carry=carry, scores=scores), scores, top
+
+
+def _reset_slot(state: ServerState, slot) -> ServerState:
+    """Zero one slot's slice of every state buffer (slot is traced, so
+    open/close never recompiles)."""
+    return jax.tree_util.tree_map(lambda t: t.at[slot].set(0), state)
 
 
 class StreamingKWSServer:
@@ -160,11 +243,19 @@ class StreamingKWSServer:
 
     Each frame tick: callers push, per active stream, either one FV_Norm
     (C,) or one raw 16 ms audio hop (`pipeline.chunk_samples` samples at
-    fs_audio) — the kinds may not be mixed within one tick. Raw audio is
-    converted by the pipeline's registered frontend with per-stream
-    filter/SRO carry; then the server runs ONE batched GRU step for all
-    streams (the accelerator's Fig. 4 timing, vectorized across streams)
-    and returns per-stream smoothed posteriors + argmax.
+    fs_audio) — the kinds may not be mixed within one tick. The whole
+    tick is one jit-compiled program over donated `ServerState` buffers:
+    frontend (for raw audio, with per-stream filter/SRO carry), ONE
+    batched GRU step for all slots (the accelerator's Fig. 4 timing,
+    vectorized across streams), softmax, and exponential score smoothing
+    — no per-stream Python loop, no host-side numpy math. Streams that
+    did not submit a frame this tick are masked out of every state
+    update (frontend carry, GRU hidden state, scores).
+
+    Slot lifecycle: `open_stream` takes a slot from the free list and
+    zeroes only that slot's slices; `close_stream` returns it. `step`
+    drives one live tick from a {stream_id: frame} dict; `run` replays
+    pre-buffered audio through a `lax.scan` over the same tick body.
     """
 
     def __init__(self, pipeline, params, max_streams: int = 256,
@@ -178,52 +269,128 @@ class StreamingKWSServer:
         self.frontend_state = (
             pipeline.state if state is None else state
         )
-        self.states = pipeline.streaming_init(max_streams)
-        self.feat_carry = pipeline.streaming_features_init(max_streams)
-        self.active: Dict[int, int] = {}  # stream_id -> slot
-        self.scores = np.zeros(
-            (max_streams, pipeline.config.gru.num_classes), np.float32
+        self.state = ServerState(
+            gru=tuple(pipeline.streaming_init(max_streams)),
+            carry=pipeline.streaming_features_init(max_streams),
+            scores=jnp.zeros(
+                (max_streams, pipeline.config.gru.num_classes),
+                jnp.float32,
+            ),
         )
+        self.active: Dict[int, int] = {}  # stream_id -> slot
         self._free = list(range(max_streams))[::-1]
+        # One compiled program per input kind; pipeline is closed over
+        # (static), state buffers are donated.
+        self._tick_audio = jax.jit(
+            functools.partial(_fused_tick, pipeline, True),
+            donate_argnums=(1,),
+        )
+        self._tick_fv = jax.jit(
+            functools.partial(_fused_tick, pipeline, False),
+            donate_argnums=(1,),
+        )
+        self._reset = jax.jit(_reset_slot, donate_argnums=(0,))
+        self._run_audio = jax.jit(
+            functools.partial(_run_scan, pipeline, True),
+            donate_argnums=(1,),
+        )
+        self._run_fv = jax.jit(
+            functools.partial(_run_scan, pipeline, False),
+            donate_argnums=(1,),
+        )
+
+    # ---- compatibility views of the fused state ----
+
+    @property
+    def states(self) -> List[jnp.ndarray]:
+        """Per-layer GRU hidden states (pre-fused API name)."""
+        return list(self.state.gru)
+
+    @property
+    def feat_carry(self):
+        """Frontend streaming carry (pre-fused API name)."""
+        return self.state.carry
+
+    @property
+    def scores(self) -> np.ndarray:
+        """Smoothed per-slot posteriors as a host array (read-only view;
+        the authoritative copy lives in `self.state.scores`)."""
+        return np.asarray(self.state.scores)
+
+    # ---- slot lifecycle ----
 
     def open_stream(self, stream_id: int):
+        if stream_id in self.active:
+            raise ValueError(f"stream {stream_id} already open")
         if not self._free:
             raise RuntimeError("server at capacity")
         slot = self._free.pop()
         self.active[stream_id] = slot
-        for i, h in enumerate(self.states):
-            self.states[i] = h.at[slot].set(0.0)
-        self.feat_carry = jax.tree_util.tree_map(
-            lambda t: t.at[slot].set(0.0), self.feat_carry
-        )
-        self.scores[slot] = 0.0
+        # zero only the reused slot — concurrent streams' slices and the
+        # free slots' garbage are untouched (they are masked anyway)
+        self.state = self._reset(self.state, jnp.int32(slot))
 
     def close_stream(self, stream_id: int):
         slot = self.active.pop(stream_id)
         self._free.append(slot)
 
-    def _features_tick(self, chunks: Dict[int, np.ndarray]) -> np.ndarray:
-        """Raw audio hops -> FV_Norm frames via the frontend (batched).
+    # ---- serving ----
 
-        The per-stream filter/SRO carry advances only for streams that
-        submitted audio this tick — a stream skipping a tick resumes
-        from its own contiguous state, not from a fabricated silent hop.
-        """
-        s = self.pipeline.chunk_samples
-        audio = np.zeros((self.max_streams, s), np.float32)
+    def _is_raw(self, dim: int) -> bool:
+        """The single kind-dispatch site: True for raw audio hops, False
+        for FV_Norm frames, canonical error otherwise. (The two widths
+        never collide for the paper's geometry.)"""
+        if dim == self.pipeline.chunk_samples:
+            return True
+        if dim == self.pipeline.config.fex.num_channels:
+            return False
+        raise ValueError(
+            "per-stream input must be an FV_Norm frame "
+            f"({self.pipeline.config.fex.num_channels},) or a raw audio "
+            f"hop ({self.pipeline.chunk_samples},); got trailing dim {dim}"
+        )
+
+    def _slab(self, frames: Dict[int, np.ndarray]):
+        """{sid: frame} -> (dense slab, mask) host-side; kind validation
+        happens downstream in `step_batch`."""
+        dims = {int(np.shape(f)[-1]) for f in frames.values()}
+        if len(dims) > 1:
+            raise ValueError(
+                "all frames in one tick must be the same kind; got "
+                f"trailing dims {sorted(dims)}"
+            )
+        dim = dims.pop()
+        slab = np.zeros((self.max_streams, dim), np.float32)
         mask = np.zeros((self.max_streams,), bool)
-        for sid, chunk in chunks.items():
-            audio[self.active[sid]] = chunk
-            mask[self.active[sid]] = True
-        new_carry, fv = self.pipeline.streaming_features_step(
-            self.feat_carry, jnp.asarray(audio), self.frontend_state
+        for sid, frame in frames.items():
+            slot = self.active[sid]
+            slab[slot] = frame
+            mask[slot] = True
+        return slab, mask
+
+    def step_batch(self, slab, mask):
+        """Pre-batched tick: the high-throughput ingress path.
+
+        slab: (max_streams, S) raw audio hops or (max_streams, C) FV_Norm
+        frames, slot-major (rows for unsubmitted slots are ignored);
+        mask: (max_streams,) bool, True where the slot submitted. Callers
+        that already maintain slot-major buffers (a socket ingress, the
+        load generator) skip `step`'s per-stream dict assembly entirely —
+        the tick is one device dispatch plus one result fetch.
+
+        Returns (scores (max_streams, K), top (max_streams,)) as host
+        arrays; rows of unsubmitted slots hold their previous values.
+        """
+        tick = (
+            self._tick_audio
+            if self._is_raw(int(np.shape(slab)[-1]))
+            else self._tick_fv
         )
-        m = jnp.asarray(mask)[:, None]
-        self.feat_carry = jax.tree_util.tree_map(
-            lambda new, old: jnp.where(m, new, old),
-            new_carry, self.feat_carry,
+        self.state, scores, top = tick(
+            self.params, self.state, jnp.asarray(slab), jnp.asarray(mask),
+            self.frontend_state, self.smoothing,
         )
-        return np.asarray(fv)
+        return np.asarray(scores), np.asarray(top)
 
     def step(self, frames: Dict[int, np.ndarray]) -> Dict[int, dict]:
         """frames: stream_id -> FV_Norm (C,) or raw audio hop (S,).
@@ -231,39 +398,98 @@ class StreamingKWSServer:
         One 16 ms tick. Inputs are raw audio when their trailing dim is
         `pipeline.chunk_samples` (e.g. 256 @ 16 kHz), FV_Norm when it is
         `fex.num_channels` (e.g. 16) — the two never collide for the
-        paper's geometry."""
-        c = self.pipeline.config.fex.num_channels
-        hop = self.pipeline.chunk_samples
-        dim = next(iter(frames.values())).shape[-1] if frames else c
-        if dim == hop:
-            fv_all = self._features_tick(frames)
-            fv = np.zeros((self.max_streams, c), np.float32)
-            for sid in frames:
-                fv[self.active[sid]] = fv_all[self.active[sid]]
-        elif dim == c:
-            fv = np.zeros((self.max_streams, c), np.float32)
-            for sid, frame in frames.items():
-                fv[self.active[sid]] = frame
-        else:
-            raise ValueError(
-                f"per-stream input must be an FV_Norm frame ({c},) or a "
-                f"raw audio hop ({hop},); got trailing dim {dim}"
-            )
-        self.states, logits = self.pipeline.streaming_step(
-            self.params, self.states, jnp.asarray(fv)
-        )
-        logits = np.asarray(logits)
+        paper's geometry. An empty dict is a no-op tick: no device call,
+        no state change."""
+        if not frames:
+            return {}
+        slab, mask = self._slab(frames)
+        scores, top = self.step_batch(slab, mask)
         out = {}
         for sid in frames:
             slot = self.active[sid]
-            p = np.exp(logits[slot] - logits[slot].max())
-            p /= p.sum()
-            self.scores[slot] = (
-                self.smoothing * self.scores[slot]
-                + (1 - self.smoothing) * p
-            )
+            out[sid] = {"probs": scores[slot], "top": int(top[slot])}
+        return out
+
+    def run_batch(self, slab, mask):
+        """Offline replay of pre-batched tick slabs, as one device program.
+
+        slab: (n_ticks, max_streams, S) raw audio hops or
+        (n_ticks, max_streams, C) FV_Norm frames; mask: (n_ticks,
+        max_streams) bool, True where the slot submitted that tick. The
+        whole replay is a `lax.scan` over the fused tick body with the
+        `ServerState` donated across ticks — the pre-refactor path could
+        not be scanned at all, since its per-tick numpy smoothing forced
+        a host round-trip every 16 ms. Compiles once per (n_ticks, kind).
+
+        Returns (scores_seq (n_ticks, N, K), tops (n_ticks, N)) as host
+        arrays and advances the server state by n_ticks.
+        """
+        run = (
+            self._run_audio
+            if self._is_raw(int(np.shape(slab)[-1]))
+            else self._run_fv
+        )
+        self.state, scores_seq, tops = run(
+            self.params, self.state, jnp.asarray(slab), jnp.asarray(mask),
+            self.frontend_state, self.smoothing,
+        )
+        return np.asarray(scores_seq), np.asarray(tops)
+
+    def run(self, buffers: Dict[int, np.ndarray]) -> Dict[int, dict]:
+        """Offline replay: buffered audio -> per-tick posteriors, scanned.
+
+        buffers: stream_id -> raw audio (n_samples,) for streams that are
+        already open; each is split into consecutive
+        `pipeline.chunk_samples` hops (trailing remainder dropped).
+        Streams may have different lengths — a stream is masked out of
+        every tick past its own end, exactly as if it had stopped
+        submitting to `step`.
+
+        The whole replay is ONE device program: `lax.scan` over the fused
+        tick body, state donated across ticks. Compiles once per
+        (n_ticks, kind) shape. Returns, per stream,
+        ``{"probs": (n_ticks_sid, K) smoothed posteriors trajectory,
+        "top": final argmax}``, and advances the server state by the
+        replayed ticks.
+        """
+        if not buffers:
+            return {}
+        hop = self.pipeline.chunk_samples
+        ticks = {sid: len(np.asarray(b)) // hop for sid, b in buffers.items()}
+        n_ticks = max(ticks.values())
+        if n_ticks == 0:
+            return {}
+        slab = np.zeros((n_ticks, self.max_streams, hop), np.float32)
+        mask = np.zeros((n_ticks, self.max_streams), bool)
+        for sid, buf in buffers.items():
+            slot = self.active[sid]
+            t = ticks[sid]
+            buf = np.asarray(buf, np.float32)[: t * hop]
+            slab[:t, slot] = buf.reshape(t, hop)
+            mask[:t, slot] = True
+        scores_seq, tops = self.run_batch(slab, mask)  # (T, N, K), (T, N)
+        out = {}
+        for sid in buffers:
+            slot = self.active[sid]
+            t = ticks[sid]
             out[sid] = {
-                "probs": self.scores[slot].copy(),
-                "top": int(self.scores[slot].argmax()),
+                "probs": scores_seq[:t, slot],
+                "top": int(tops[t - 1, slot]) if t else None,
             }
         return out
+
+
+def _run_scan(pipeline, raw_audio, params, state: ServerState, slab, mask,
+              frontend_state, smoothing):
+    """lax.scan of the fused tick over (n_ticks, N, S|C) buffered input."""
+
+    def body(st, xs):
+        x_t, m_t = xs
+        st, scores, top = _fused_tick(
+            pipeline, raw_audio, params, st, x_t, m_t, frontend_state,
+            smoothing,
+        )
+        return st, (scores, top)
+
+    state, (scores_seq, tops) = jax.lax.scan(body, state, (slab, mask))
+    return state, scores_seq, tops
