@@ -14,6 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import quant
+from repro.core.classifier import get_classifier, resolve_classifier_key
 from repro.core.fex import FExConfig, FExNormStats, fex_frames
 from repro.core.gru import (
     GRUConfig,
@@ -137,12 +138,17 @@ def train_classifier(
 
 
 def evaluate(model: Dict, feats: np.ndarray, labels: np.ndarray,
-             batch: int = 128):
+             batch: int = 128, classifier: Optional[str] = None):
+    """Accuracy + confusion matrix through a registered classifier
+    backend; ``classifier=None`` resolves from the model config (the
+    QAT path), ``"integer"`` runs the bit-exact int8/Q6.8 engine."""
     gcfg = model["config"]
+    backend = get_classifier(resolve_classifier_key(classifier, gcfg))
+    params = backend.prepare(model["params"], gcfg)
 
     @jax.jit
     def logits_fn(fv):
-        return gru_classifier_forward(model["params"], fv, gcfg)[:, -1, :]
+        return backend.forward(params, fv, gcfg)[:, -1, :]
 
     preds = []
     for i in range(0, len(labels), batch):
@@ -166,8 +172,15 @@ def percentile_stats(latencies_s) -> Dict[str, float]:
 
       backend        jax backend the sweep ran on ("cpu" / "tpu" / ...)
       frontend       registered FeatureFrontend of the benched pipeline
+      classifiers    registered ClassifierBackend keys the sweep covered
       quick          True when the quick (CI-sized) sweep ran
-      results[]      one entry per (mode, kind, max_streams, occupancy):
+      results[]      one entry per (classifier, mode, kind, max_streams,
+                     occupancy):
+        classifier     registered ClassifierBackend of the point: "qat"
+                       (fake-quant float tick) or "integer" (bit-exact
+                       int8/Q6.8 engine, weight codes resident);
+                       "legacy" mode exists only for "qat" (the
+                       pre-refactor path had no integer engine)
         mode           "fused" (one jitted tick per step_batch call),
                        "legacy" (pre-refactor per-stream path), or
                        "scan" (run_batch lax.scan replay; per-tick

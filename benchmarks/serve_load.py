@@ -1,7 +1,8 @@
 """Serving load generator: fused jitted tick vs the pre-refactor path.
 
-Sweeps `max_streams` x occupancy x input kind over the streaming KWS
-server and measures sustained tick throughput and per-tick latency for:
+Sweeps classifier backend x `max_streams` x occupancy x input kind over
+the streaming KWS server and measures sustained tick throughput and
+per-tick latency for:
 
   * ``fused``  — the current `StreamingKWSServer.step_batch`: one
     jit-compiled device program per tick (frontend + GRU + softmax +
@@ -21,6 +22,15 @@ carry raw 16 ms hops (adds the frontend filter scan, identical compute
 in both paths, so the ratio there is bounded by the shared filter cost
 on CPU).
 
+Classifier backends (``--classifier``, default sweeps qat + integer):
+``qat`` is the fake-quant float tick; ``integer`` runs the bit-exact
+int8/Q6.8 engine (`repro.core.gru_int`) — weight codes resident, int32
+GRU state leaves in `ServerState` — through the same fused tick and
+scan drivers. ``legacy`` mode is benched only for ``qat`` (the
+pre-refactor path had no integer engine), so the headline claim is
+unchanged; integer rows quantify the cost/benefit of code-domain
+serving on this backend.
+
 Writes ``BENCH_serve.json`` (fields documented in benchmarks/common.py)
 and checks the claim: at 256 streams, full occupancy, FV_Norm ticks, the
 fused tick body sustains >= 5x the legacy path's ticks/sec. The claimed
@@ -32,11 +42,12 @@ per-call fused tick is reported alongside as ``speedup_live`` (it wins
 by dispatch/host overhead only, since both paths pay the same GRU
 compute per tick on CPU).
 
-  PYTHONPATH=src python -m benchmarks.serve_load
+  PYTHONPATH=src python -m benchmarks.serve_load [--classifier all]
 """
 
 from __future__ import annotations
 
+import argparse
 import json
 import time
 
@@ -131,7 +142,7 @@ class _LegacyStreamingServer:
         return out
 
 
-def _pipeline():
+def _pipeline(classifier=None):
     rng = np.random.default_rng(0)
     audio = jnp.asarray(
         rng.standard_normal((4, 16000)).astype(np.float32) * 0.05
@@ -139,7 +150,9 @@ def _pipeline():
     boot = KWSPipeline(KWSPipelineConfig(use_norm=False))
     _, raw = boot.features(audio)
     stats = fit_norm_stats(quant.log_compress_lut(raw, 12, 10))
-    return KWSPipeline(KWSPipelineConfig(), norm_stats=stats)
+    return KWSPipeline(
+        KWSPipelineConfig(classifier=classifier), norm_stats=stats
+    )
 
 
 def _traffic(pipe, max_streams, n_active, kind, seed=0, n_variants=8):
@@ -217,6 +230,7 @@ def _bench_mode(mode, kind, pipe, params, max_streams, occupancy, n_ticks):
     stats = percentile_stats(lat)
     ticks_per_s = 1.0 / float(np.mean(lat))
     return {
+        "classifier": pipe.config.classifier_key,
         "mode": mode,
         "kind": kind,
         "max_streams": max_streams,
@@ -229,34 +243,45 @@ def _bench_mode(mode, kind, pipe, params, max_streams, occupancy, n_ticks):
     }
 
 
-def run():
-    pipe = _pipeline()
-    params = pipe.init_params(jax.random.PRNGKey(0))
+def run(classifiers=("qat", "integer")):
     sweep_streams = [64, 256] if QUICK else [64, 256, 1024]
     occupancies = [0.5, 1.0]
     results = []
-    for kind in ("fv", "audio"):
-        modes = ("fused", "scan", "legacy")
-        for ms in sweep_streams:
-            for occ in occupancies:
-                for mode in modes:
-                    r = _bench_mode(
-                        mode, kind, pipe, params, ms, occ, N_TICKS
-                    )
-                    results.append(r)
-                    print(
-                        f"  {kind:5s} {mode:6s} N={ms:5d} occ={occ:.1f}: "
-                        f"{r['ticks_per_s']:8.1f} ticks/s  "
-                        f"p50 {r['p50_ms']:7.2f} ms  "
-                        f"p99 {r['p99_ms']:7.2f} ms  "
-                        f"({r['streams_per_s']:.0f} streams/s)"
-                    )
+    frontend = None
+    for clf in classifiers:
+        pipe = _pipeline(clf)
+        frontend = pipe.config.frontend
+        params = pipe.init_params(jax.random.PRNGKey(0))
+        for kind in ("fv", "audio"):
+            # the legacy baseline predates the classifier registry;
+            # bench it only on the backend it historically ran (qat)
+            modes = (
+                ("fused", "scan", "legacy") if clf == "qat"
+                else ("fused", "scan")
+            )
+            for ms in sweep_streams:
+                for occ in occupancies:
+                    for mode in modes:
+                        r = _bench_mode(
+                            mode, kind, pipe, params, ms, occ, N_TICKS
+                        )
+                        results.append(r)
+                        print(
+                            f"  {clf:7s} {kind:5s} {mode:6s} N={ms:5d} "
+                            f"occ={occ:.1f}: "
+                            f"{r['ticks_per_s']:8.1f} ticks/s  "
+                            f"p50 {r['p50_ms']:7.2f} ms  "
+                            f"p99 {r['p99_ms']:7.2f} ms  "
+                            f"({r['streams_per_s']:.0f} streams/s)"
+                        )
 
-    def _pick(mode, kind):
+    def _pick(mode, kind, clf="qat"):
         return next(
-            r for r in results
-            if r["mode"] == mode and r["kind"] == kind
-            and r["max_streams"] == 256 and r["occupancy"] == 1.0
+            (r for r in results
+             if r["mode"] == mode and r["kind"] == kind
+             and r["classifier"] == clf
+             and r["max_streams"] == 256 and r["occupancy"] == 1.0),
+            None,
         )
 
     # Headline: sustained ticks/sec of the fused tick body (the scanned
@@ -265,26 +290,25 @@ def run():
     # round-trip every tick and cannot scan) vs the pre-refactor
     # per-stream path on the same traffic. The live per-call fused tick
     # is reported separately as speedup_live, not folded into the claim.
-    fused_live = _pick("fused", "fv")
-    fused_scan = _pick("scan", "fv")
-    legacy = _pick("legacy", "fv")
-    speedup_scan = fused_scan["ticks_per_s"] / legacy["ticks_per_s"]
-    speedup_live = fused_live["ticks_per_s"] / legacy["ticks_per_s"]
-    ok = speedup_scan >= 5.0
-    audio_scan_speedup = (
-        _pick("scan", "audio")["ticks_per_s"]
-        / _pick("legacy", "audio")["ticks_per_s"]
-    )
-    payload = {
-        "backend": jax.default_backend(),
-        "frontend": pipe.config.frontend,
-        "quick": QUICK,
-        "results": results,
-        "claim": {
+    # The claim gates on the qat backend; a sweep restricted to another
+    # backend (--classifier integer) records results without a claim.
+    claim = None
+    if "qat" in classifiers:
+        fused_live = _pick("fused", "fv")
+        fused_scan = _pick("scan", "fv")
+        legacy = _pick("legacy", "fv")
+        speedup_scan = fused_scan["ticks_per_s"] / legacy["ticks_per_s"]
+        speedup_live = fused_live["ticks_per_s"] / legacy["ticks_per_s"]
+        ok = speedup_scan >= 5.0
+        audio_scan_speedup = (
+            _pick("scan", "audio")["ticks_per_s"]
+            / _pick("legacy", "audio")["ticks_per_s"]
+        )
+        claim = {
             "what": "sustained fused-tick throughput (scanned replay "
                     "driver) >= 5x legacy ticks/sec at 256 streams, "
-                    "occupancy 1.0, FV_Norm ticks; live per-call fused "
-                    "ticks reported as speedup_live",
+                    "occupancy 1.0, FV_Norm ticks, qat classifier; live "
+                    "per-call fused ticks reported as speedup_live",
             "fused_live_ticks_per_s": fused_live["ticks_per_s"],
             "fused_scan_ticks_per_s": fused_scan["ticks_per_s"],
             "legacy_ticks_per_s": legacy["ticks_per_s"],
@@ -292,20 +316,56 @@ def run():
             "speedup_live": speedup_live,
             "audio_scan_speedup": audio_scan_speedup,
             "ok": ok,
-        },
+        }
+        int_scan = _pick("scan", "fv", "integer")
+        if int_scan is not None:
+            claim["integer_scan_ticks_per_s"] = int_scan["ticks_per_s"]
+            claim["integer_vs_qat_scan"] = (
+                int_scan["ticks_per_s"] / fused_scan["ticks_per_s"]
+            )
+    payload = {
+        "backend": jax.default_backend(),
+        "frontend": frontend,
+        "classifiers": list(classifiers),
+        "quick": QUICK,
+        "results": results,
+        "claim": claim,
     }
     with open("BENCH_serve.json", "w") as f:
         json.dump(payload, f, indent=2)
-    print(
-        f"serve_load: fused scan {fused_scan['ticks_per_s']:.1f} / live "
-        f"{fused_live['ticks_per_s']:.1f} vs legacy "
-        f"{legacy['ticks_per_s']:.1f} ticks/s at 256 streams (fv) -> "
-        f"{speedup_scan:.1f}x sustained, {speedup_live:.1f}x live "
-        f"(audio scan: {audio_scan_speedup:.1f}x)  "
-        f"[{'PASS' if ok else 'FAIL'}] (BENCH_serve.json written)"
-    )
-    return payload["claim"]
+    if claim is not None:
+        extra = (
+            f", integer scan {claim['integer_vs_qat_scan']:.2f}x qat"
+            if "integer_vs_qat_scan" in claim else ""
+        )
+        print(
+            f"serve_load: fused scan "
+            f"{claim['fused_scan_ticks_per_s']:.1f} / live "
+            f"{claim['fused_live_ticks_per_s']:.1f} vs legacy "
+            f"{claim['legacy_ticks_per_s']:.1f} ticks/s at 256 streams "
+            f"(fv, qat) -> {claim['speedup']:.1f}x sustained, "
+            f"{claim['speedup_live']:.1f}x live "
+            f"(audio scan: {claim['audio_scan_speedup']:.1f}x{extra})  "
+            f"[{'PASS' if claim['ok'] else 'FAIL'}] "
+            f"(BENCH_serve.json written)"
+        )
+    else:
+        print(
+            f"serve_load: swept classifiers {list(classifiers)} (no qat "
+            f"baseline in sweep -> no claim); BENCH_serve.json written"
+        )
+    return claim
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--classifier", default="all",
+        choices=["all", "qat", "integer", "float"],
+        help="classifier backend(s) to sweep; 'all' = qat + integer",
+    )
+    args = ap.parse_args()
+    run(
+        ("qat", "integer") if args.classifier == "all"
+        else (args.classifier,)
+    )

@@ -67,6 +67,17 @@ def main():
         print(f"frontend {name:15s}: FV_Raw max |diff| vs software "
               f"reference = {err:.1f} LSB")
 
+    # ...and the classifier is swappable the same way: the "integer"
+    # backend evaluates the IC's actual arithmetic (int8 weight codes,
+    # Q6.8 activations, 24-bit accumulators) bit-identically to QAT
+    pipe_int = KWSPipeline(
+        KWSPipelineConfig(classifier="integer"), norm_stats=stats
+    )
+    scores_int = pipe_int.logits_all_frames(params, fv_norm)
+    exact = bool(jnp.array_equal(scores, scores_int))
+    print(f"classifier 'integer' (int8/Q6.8 codes): bit-identical to "
+          f"QAT scores = {exact}")
+
     acc = paper_accelerator()
     pm = paper_power_model()
     g = GRUConfig()

@@ -11,7 +11,7 @@ replays each stream's full buffered audio through the server's
 `lax.scan` driver instead of live per-tick calls.
 
   PYTHONPATH=src python examples/serve_streaming.py [--streams 32]
-      [--frontend software] [--offline]
+      [--frontend software] [--classifier qat|integer] [--offline]
 """
 
 import argparse
@@ -37,6 +37,11 @@ def main():
     ap.add_argument("--seconds", type=float, default=1.0)
     ap.add_argument("--frontend", default="software",
                     choices=["software", "hardware", "hardware-pallas"])
+    ap.add_argument("--classifier", default="qat",
+                    choices=["float", "qat", "integer"],
+                    help="classifier backend; 'integer' serves the "
+                         "bit-exact int8/Q6.8 code engine (the IC's "
+                         "WMEM-resident arithmetic)")
     ap.add_argument("--offline", action="store_true",
                     help="replay buffered audio via the lax.scan driver "
                          "(server.run) instead of live per-tick step calls")
@@ -53,7 +58,10 @@ def main():
         sigma=fv_log.reshape(-1, 16).std(0) + 1e-3,
     )
     pipe = KWSPipeline(
-        KWSPipelineConfig(frontend=args.frontend), norm_stats=stats
+        KWSPipelineConfig(
+            frontend=args.frontend, classifier=args.classifier
+        ),
+        norm_stats=stats,
     )
     # calibrated FrontendState (beta/alpha for the hardware paths; the
     # fitted norm stats are carried over automatically)
@@ -70,7 +78,7 @@ def main():
     mode = "offline lax.scan replay" if args.offline else "live fused ticks"
     print(f"serving {args.streams} streams x {n_frames} raw-audio hops "
           f"({hop} samples / 16 ms each) via frontend "
-          f"{args.frontend!r} [{mode}]...")
+          f"{args.frontend!r}, classifier {args.classifier!r} [{mode}]...")
     t0 = time.time()
     detections = {}
     if args.offline:

@@ -1,5 +1,11 @@
 """Core library: the paper's contribution (time-domain FEx + GRU-FC KWS)."""
 
+from repro.core.classifier import (
+    ClassifierBackend,
+    available_classifiers,
+    get_classifier,
+    register_classifier,
+)
 from repro.core.fex import FExConfig, FExNormStats, fex_forward, fex_frames
 from repro.core.filters import (
     BiquadCoeffs,
@@ -14,6 +20,7 @@ from repro.core.frontend import (
     register_frontend,
 )
 from repro.core.gru import GRUConfig, gru_classifier_forward, init_gru_classifier
+from repro.core.gru_int import QuantizedClassifier
 from repro.core.pipeline import KWSPipeline, KWSPipelineConfig
 from repro.core.tdfex import TDFExConfig, TDFExState, tdfex_forward
 
@@ -30,9 +37,14 @@ __all__ = [
     "available_frontends",
     "get_frontend",
     "register_frontend",
+    "ClassifierBackend",
+    "available_classifiers",
+    "get_classifier",
+    "register_classifier",
     "GRUConfig",
     "gru_classifier_forward",
     "init_gru_classifier",
+    "QuantizedClassifier",
     "KWSPipeline",
     "KWSPipelineConfig",
     "TDFExConfig",

@@ -11,8 +11,12 @@ Network: 16-in -> GRU(48) -> GRU(48) -> FC(12).  PyTorch gate convention
 Weight memory at 8 bits = ~24 KB, matching the IC's WMEM; QAT applies
 8-bit weights / 14-bit (Q6.8) activations via `repro.core.quant`.
 
-Two execution paths:
+Three execution paths (selected via `KWSPipelineConfig.classifier` —
+see `repro.core.classifier`):
   * float / QAT (this file) — training and the software-model numbers;
+  * bit-exact integer engine (`repro.core.gru_int`) — int8 weight codes
+    and Q6.8 activation codes through the saturating-int24 `intgemm`
+    kernel, bit-identical to the QAT fake-quant forward;
   * weights-resident Pallas kernel (`repro.kernels.gru`) — the TPU
     analogue of the IC's 8-HPE accelerator, validated against this file.
 """
@@ -91,11 +95,16 @@ def _maybe_q(x: jnp.ndarray, spec: Optional[quant.QuantSpec]) -> jnp.ndarray:
 
 
 def _layer_weights(layer: Params, wspec) -> Tuple[jnp.ndarray, ...]:
+    # Biases are pre-loaded into the 24-bit HPE accumulator, which works
+    # at the Q6.8 x int8 product scale (frac 15) — quantize them to that
+    # grid whenever weights are quantized, so the QAT forward is exactly
+    # replayable on integer codes (repro.core.gru_int).
+    bspec = None if wspec is None else quant.BIAS_Q8_15
     return (
         _maybe_q(layer["w_i"], wspec),
         _maybe_q(layer["w_h"], wspec),
-        layer["b_i"],
-        layer["b_h"],
+        _maybe_q(layer["b_i"], bspec),
+        _maybe_q(layer["b_h"], bspec),
     )
 
 
@@ -115,10 +124,14 @@ def gru_cell(
     gh = _maybe_q(h @ w_h + b_h, aspec)
     i_r, i_z, i_n = jnp.split(gi, 3, axis=-1)
     h_r, h_z, h_n = jnp.split(gh, 3, axis=-1)
-    r = jax.nn.sigmoid(i_r + h_r)
-    z = jax.nn.sigmoid(i_z + h_z)
-    n = jnp.tanh(i_n + _maybe_q(r * h_n, aspec))
-    r, z, n = (_maybe_q(v, aspec) for v in (r, z, n))
+    # Gate outputs are quantized BEFORE use: on the IC sigmoid/tanh are
+    # Q6.8 ROM lookups, so every downstream consumer (the r * h_n
+    # product and the convex h update) sees register values, never the
+    # float intermediate. This keeps the QAT forward bit-replayable on
+    # integer codes (repro.core.gru_int).
+    r = _maybe_q(jax.nn.sigmoid(i_r + h_r), aspec)
+    z = _maybe_q(jax.nn.sigmoid(i_z + h_z), aspec)
+    n = _maybe_q(jnp.tanh(i_n + _maybe_q(r * h_n, aspec)), aspec)
     h_new = (1.0 - z) * n + z * h
     return _maybe_q(h_new, aspec)
 
@@ -154,8 +167,9 @@ def gru_classifier_forward(
         xs, _ = gru_layer(layer, xs, config)
     wspec = config.weight_spec if config.quantized else None
     aspec = config.act_spec if config.quantized else None
+    bspec = None if wspec is None else quant.BIAS_Q8_15
     w = _maybe_q(params["fc"]["w"], wspec)
-    logits = xs @ w + params["fc"]["b"]
+    logits = xs @ w + _maybe_q(params["fc"]["b"], bspec)
     return _maybe_q(logits, aspec)
 
 
@@ -178,8 +192,9 @@ def gru_classifier_step(
         x = h_new
     wspec = config.weight_spec if config.quantized else None
     aspec = config.act_spec if config.quantized else None
+    bspec = None if wspec is None else quant.BIAS_Q8_15
     w = _maybe_q(params["fc"]["w"], wspec)
-    logits = _maybe_q(x @ w + params["fc"]["b"], aspec)
+    logits = _maybe_q(x @ w + _maybe_q(params["fc"]["b"], bspec), aspec)
     return new_states, logits
 
 

@@ -1,9 +1,19 @@
 """End-to-end KWS pipeline assembly (Fig. 3): FEx -> classifier.
 
-The feature extractor is pluggable: `KWSPipelineConfig.frontend` names a
-registered `repro.core.frontend.FeatureFrontend` ("software",
-"hardware", "hardware-pallas" — see that module), and every entry point
-here routes through it:
+Both stages are pluggable, string-keyed backends:
+
+  * `KWSPipelineConfig.frontend` names a registered
+    `repro.core.frontend.FeatureFrontend` ("software", "hardware",
+    "hardware-pallas" — see that module);
+  * `KWSPipelineConfig.classifier` names a registered
+    `repro.core.classifier.ClassifierBackend` ("float", "qat",
+    "integer") — None resolves from ``gru.quantized``. The "integer"
+    backend runs the bit-exact int8/Q6.8 engine of
+    `repro.core.gru_int`; `prepare_params` converts float training
+    params to its code pytree, and every classifier entry point below
+    accepts either form.
+
+Every feature entry point routes through the frontend:
 
   features(audio, state)                batch audio -> (FV_Norm, FV_Raw)
   record_features(audio, state)         batched numpy recording of
@@ -32,6 +42,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -39,19 +50,18 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import quant
+from repro.core.classifier import (
+    ClassifierBackend,
+    get_classifier,
+    resolve_classifier_key,
+)
 from repro.core.fex import FExConfig, FExNormStats
 from repro.core.frontend import (
     FeatureFrontend,
     FrontendState,
     get_frontend,
 )
-from repro.core.gru import (
-    GRUConfig,
-    gru_classifier_forward,
-    gru_classifier_step,
-    init_gru_classifier,
-    init_states,
-)
+from repro.core.gru import GRUConfig, init_gru_classifier
 from repro.core.tdfex import TDFExConfig, TDFExState
 
 __all__ = [
@@ -71,6 +81,10 @@ class KWSPipelineConfig:
     tdfex: Optional[TDFExConfig] = None
     use_log: bool = True
     use_norm: bool = True
+    # Registered ClassifierBackend key ("float" / "qat" / "integer");
+    # None resolves from gru.quantized ("qat" when True else "float"),
+    # preserving the pre-registry behavior.
+    classifier: Optional[str] = None
 
     def __post_init__(self):
         # The pipeline post-processes (and shapes chunks) with `fex`
@@ -89,6 +103,10 @@ class KWSPipelineConfig:
             return self.tdfex
         return TDFExConfig(fex=self.fex)
 
+    @property
+    def classifier_key(self) -> str:
+        return resolve_classifier_key(self.classifier, self.gru)
+
 
 class KWSPipeline:
     """Stateless-functional pipeline with convenience wrappers.
@@ -105,11 +123,18 @@ class KWSPipeline:
     ):
         self.config = config
         self.frontend: FeatureFrontend = get_frontend(config.frontend)
+        self.classifier: ClassifierBackend = get_classifier(
+            config.classifier_key
+        )
         if state is None:
             state = FrontendState()
         if norm_stats is not None:
             state = state.with_norm_stats(norm_stats)
         self.state = state
+        # memo for prepare_params: (params object, prepared pytree).
+        # The strong reference to the keys object keeps its id() from
+        # being recycled while the entry is alive.
+        self._prepared: Optional[Tuple[Any, Any]] = None
 
     @property
     def norm_stats(self) -> Optional[FExNormStats]:
@@ -153,6 +178,13 @@ class KWSPipeline:
     def features_software(self, audio: jnp.ndarray):
         """Deprecated alias kept for the pre-registry API; equivalent to
         `features` on a ``frontend="software"`` pipeline."""
+        warnings.warn(
+            "KWSPipeline.features_software is deprecated; use "
+            "KWSPipeline.features (works for any cfg.frontend) — see "
+            "the migration table in CHANGES.md",
+            DeprecationWarning,
+            stacklevel=2,
+        )
         if self.config.frontend != "software":
             raise ValueError(
                 "features_software on a "
@@ -218,17 +250,42 @@ class KWSPipeline:
     # ---------- classifier ----------
 
     def init_params(self, key: jax.Array) -> Dict[str, Any]:
+        """Float training params (QAT trains in float; the configured
+        backend converts via `prepare_params` at inference time)."""
         return init_gru_classifier(key, self.config.gru)
 
-    @functools.partial(jax.jit, static_argnums=(0,))
-    def logits(self, params, fv_norm: jnp.ndarray) -> jnp.ndarray:
-        """(B, F, C) -> final-frame logits (B, K)."""
-        all_logits = gru_classifier_forward(params, fv_norm, self.config.gru)
-        return all_logits[:, -1, :]
+    def prepare_params(self, params):
+        """Float training params -> whatever the configured backend
+        consumes (e.g. `QuantizedClassifier` integer codes for
+        ``classifier="integer"``). Idempotent: already-prepared params
+        pass through, so every public entry point below can call it.
+        The last conversion is memoized by parameter identity, so
+        per-frame callers (`streaming_step`) don't re-quantize the
+        whole parameter pytree every 16 ms tick."""
+        if self._prepared is not None and self._prepared[0] is params:
+            return self._prepared[1]
+        prepared = self.classifier.prepare(params, self.config.gru)
+        self._prepared = (params, prepared)
+        return prepared
 
     @functools.partial(jax.jit, static_argnums=(0,))
+    def _logits_jit(self, params, fv_norm: jnp.ndarray) -> jnp.ndarray:
+        all_logits = self.classifier.forward(
+            params, fv_norm, self.config.gru
+        )
+        return all_logits[:, -1, :]
+
+    def logits(self, params, fv_norm: jnp.ndarray) -> jnp.ndarray:
+        """(B, F, C) -> final-frame logits (B, K), via the configured
+        classifier backend."""
+        return self._logits_jit(self.prepare_params(params), fv_norm)
+
+    @functools.partial(jax.jit, static_argnums=(0,))
+    def _logits_all_jit(self, params, fv_norm: jnp.ndarray) -> jnp.ndarray:
+        return self.classifier.forward(params, fv_norm, self.config.gru)
+
     def logits_all_frames(self, params, fv_norm: jnp.ndarray) -> jnp.ndarray:
-        return gru_classifier_forward(params, fv_norm, self.config.gru)
+        return self._logits_all_jit(self.prepare_params(params), fv_norm)
 
     def predict(
         self,
@@ -249,13 +306,19 @@ class KWSPipeline:
         return int(round(fexc.fs_audio * fexc.frame_shift_ms / 1000.0))
 
     def streaming_init(self, batch: int):
-        """Classifier (GRU) state for a batch of streams."""
-        return init_states(self.config.gru, batch)
+        """Classifier (GRU) state for a batch of streams — float32 for
+        the float/qat backends, int32 Q6.8 codes for "integer"."""
+        return self.classifier.init_states(self.config.gru, batch)
 
     @functools.partial(jax.jit, static_argnums=(0,))
+    def _streaming_step_jit(self, params, states, fv_t: jnp.ndarray):
+        return self.classifier.step(params, states, fv_t, self.config.gru)
+
     def streaming_step(self, params, states, fv_t: jnp.ndarray):
         """One 16 ms frame for a batch of streams -> (states, logits)."""
-        return gru_classifier_step(params, states, fv_t, self.config.gru)
+        return self._streaming_step_jit(
+            self.prepare_params(params), states, fv_t
+        )
 
     def streaming_features_init(self, batch: int):
         """Frontend carry (filter / SRO phase state) for batch streams."""
@@ -280,8 +343,11 @@ class KWSPipeline:
         return carry, fv_norm
 
     def streaming_logits_apply(self, params, states, fv_t: jnp.ndarray):
-        """Pure (unjitted) body of `streaming_step`, for fusing callers."""
-        return gru_classifier_step(params, states, fv_t, self.config.gru)
+        """Pure (unjitted) body of `streaming_step`, for fusing callers.
+
+        ``params`` must already be backend-shaped (`prepare_params`);
+        the fused serving tick prepares once at server construction."""
+        return self.classifier.step(params, states, fv_t, self.config.gru)
 
     @functools.partial(jax.jit, static_argnums=(0,))
     def _sfeatures_jit(self, carry, chunk, state, key):
@@ -322,6 +388,14 @@ def record_features_hardware(
     """Deprecated shim for the pre-registry API: record FV_Raw from the
     hardware sim. Use ``KWSPipeline(KWSPipelineConfig(frontend="hardware",
     ...)).record_features(audio, state)`` instead."""
+    warnings.warn(
+        "record_features_hardware is deprecated; use "
+        'KWSPipeline(KWSPipelineConfig(frontend="hardware", tdfex=...), '
+        "state=hardware_state(...)).record_features(audio, key=...) — "
+        "see the migration table in CHANGES.md",
+        DeprecationWarning,
+        stacklevel=2,
+    )
     from repro.core.frontend import hardware_state
 
     cfg = KWSPipelineConfig(

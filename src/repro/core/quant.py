@@ -16,6 +16,7 @@ kernel) whose results the QAT fake-quant path matches by construction.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Optional
 
 import jax
@@ -26,6 +27,7 @@ __all__ = [
     "ACT_Q6_8",
     "WEIGHT_INT8",
     "ACC_INT24",
+    "BIAS_Q8_15",
     "ste_round",
     "fake_quant",
     "quantize_int",
@@ -33,6 +35,12 @@ __all__ = [
     "quantize_unsigned",
     "log_compress_lut",
     "make_log_lut",
+    "round_shift_even",
+    "clip_act_codes",
+    "sigmoid_lut_q68",
+    "tanh_lut_q68",
+    "lut_sigmoid_q68",
+    "lut_tanh_q68",
 ]
 
 
@@ -72,6 +80,9 @@ WEIGHT_INT8 = QuantSpec(bits=8, frac_bits=7, signed=True)  # weights in [-1, 1)
 ACC_INT24 = QuantSpec(bits=24, frac_bits=16, signed=True)  # HPE accumulator
 FV_RAW_U12 = QuantSpec(bits=12, frac_bits=0, signed=False)  # quantizer output
 FV_LOG_U10 = QuantSpec(bits=10, frac_bits=0, signed=False)  # log LUT output
+# Biases live pre-loaded in the HPE accumulator, at the accumulation
+# scale of a Q6.8 activation x int8 weight product (frac = 8 + 7 = 15).
+BIAS_Q8_15 = QuantSpec(bits=24, frac_bits=15, signed=True)
 
 
 @jax.custom_jvp
@@ -142,3 +153,83 @@ def log_compress_lut(codes: jnp.ndarray, in_bits: int = 12, out_bits: int = 10):
     x = jnp.clip(codes, 0.0, 2.0**in_bits - 1.0)
     out = (2.0**out_bits - 1.0) * jnp.log2(1.0 + x) / (in_bits * 1.0)
     return ste_round(out)
+
+
+# --------------------------------------------------------------------------
+# Bit-exact integer inference substrate (the IC's datapath on codes).
+#
+# The contract with the QAT fake-quant path: every float op the QAT
+# forward performs on grid values is exactly representable in float32
+# for the network's magnitudes, so replaying it on integer codes with
+# the same round-to-nearest-even rule is bit-identical (regression-
+# tested in tests/test_classifier_int.py). Rescaling a frac-a x frac-b
+# product (or a bias-augmented accumulator) back to Q6.8 is a single
+# `round_shift_even`; sigmoid/tanh are ROM lookups over the 15-bit sum
+# of two saturated Q6.8 addends, exactly as the IC's LUTs.
+# --------------------------------------------------------------------------
+
+def round_shift_even(codes: jnp.ndarray, shift: int) -> jnp.ndarray:
+    """``round(codes / 2**shift)`` with ties-to-even, pure integer ops.
+
+    Matches `jnp.round` (round-half-even) on the same rational values,
+    which is what makes the integer path reproduce `fake_quant` bit for
+    bit. `codes` must be a signed integer array; the arithmetic right
+    shift floors for negatives, and the remainder test rounds the tie
+    toward the even quotient.
+    """
+    if shift == 0:
+        return codes
+    half = 1 << (shift - 1)
+    q = codes >> shift  # arithmetic shift: floor division
+    r = codes - (q << shift)  # remainder in [0, 2**shift)
+    round_up = (r > half) | ((r == half) & ((q & 1) == 1))
+    return q + round_up.astype(q.dtype)
+
+
+def clip_act_codes(codes: jnp.ndarray) -> jnp.ndarray:
+    """Saturate integer codes to the Q6.8 activation register range."""
+    return jnp.clip(codes, ACT_Q6_8.qmin, ACT_Q6_8.qmax)
+
+
+# Domain of the sigmoid/tanh LUTs: the sum of two saturated Q6.8 codes
+# (gate preactivations are i_gate + h_gate with both addends already
+# clipped to the activation register), i.e. [2*qmin, 2*qmax].
+_LUT_MIN = 2 * ACT_Q6_8.qmin
+_LUT_MAX = 2 * ACT_Q6_8.qmax
+
+
+@functools.lru_cache(maxsize=None)
+def sigmoid_lut_q68() -> jnp.ndarray:
+    """Q6.8 sigmoid ROM over the summed-preactivation code domain.
+
+    Entry ``i`` holds ``quantize_int(sigmoid((i + _LUT_MIN) * 2^-8))`` —
+    the same float evaluation + round-half-even the QAT path performs,
+    so lookup and fake-quant agree exactly on every representable input.
+    Built eagerly even when first requested under a trace (the cached
+    array must be a constant, not a tracer of the enclosing scan/jit).
+    """
+    with jax.ensure_compile_time_eval():
+        codes = jnp.arange(_LUT_MIN, _LUT_MAX + 1, dtype=jnp.int32)
+        vals = jax.nn.sigmoid(codes.astype(jnp.float32) * ACT_Q6_8.scale)
+        return quantize_int(vals, ACT_Q6_8)
+
+
+@functools.lru_cache(maxsize=None)
+def tanh_lut_q68() -> jnp.ndarray:
+    """Q6.8 tanh ROM over the summed-preactivation code domain."""
+    with jax.ensure_compile_time_eval():
+        codes = jnp.arange(_LUT_MIN, _LUT_MAX + 1, dtype=jnp.int32)
+        vals = jnp.tanh(codes.astype(jnp.float32) * ACT_Q6_8.scale)
+        return quantize_int(vals, ACT_Q6_8)
+
+
+def lut_sigmoid_q68(codes: jnp.ndarray) -> jnp.ndarray:
+    """Integer sigmoid: summed Q6.8 preactivation codes -> Q6.8 codes."""
+    idx = jnp.clip(codes, _LUT_MIN, _LUT_MAX) - _LUT_MIN
+    return jnp.take(sigmoid_lut_q68(), idx)
+
+
+def lut_tanh_q68(codes: jnp.ndarray) -> jnp.ndarray:
+    """Integer tanh: summed Q6.8 preactivation codes -> Q6.8 codes."""
+    idx = jnp.clip(codes, _LUT_MIN, _LUT_MAX) - _LUT_MIN
+    return jnp.take(tanh_lut_q68(), idx)

@@ -1,4 +1,23 @@
-"""jit'd wrapper with shape padding and auto-interpret off TPU."""
+"""Config-aware public entry point for the integer GEMM kernel.
+
+`intgemm` picks one of three equivalent implementations per call:
+
+  * ``pallas``    — the compiled Mosaic kernel (TPU), the MXU analogue
+                    of the IC's 8-HPE int8 datapath;
+  * ``interpret`` — the same kernel body run by the Pallas interpreter
+                    (validates kernel logic on CPU CI);
+  * ``reference`` — the exact jnp int32 matmul + final 24-bit saturation
+                    (`intgemm_ref`; fastest off-TPU, bit-identical to
+                    the kernel for all in-range inputs).
+
+Dispatch is automatic (pallas on TPU, reference elsewhere) unless
+forced via ``dispatch``; the legacy ``interpret=`` flag is honored.
+
+`intgemm` is trace-aware: inside an outer trace (the fused serving tick
+of `repro.serving.serve_loop`, the integer classifier's `lax.scan`
+drivers) it inlines the chosen implementation instead of nesting
+another `jax.jit`, so the caller's program keeps a single jaxpr.
+"""
 
 from __future__ import annotations
 
@@ -9,6 +28,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.intgemm.kernel import intgemm_pallas
+from repro.kernels.intgemm.ref import intgemm_ref
 
 
 @functools.partial(
@@ -22,6 +42,26 @@ def _intgemm_jit(x, w, block_m, block_n, block_k, interpret):
     )
 
 
+def resolve_intgemm_dispatch(
+    dispatch: str = "auto",
+    interpret: Optional[bool] = None,
+) -> str:
+    """Resolve 'auto' to a concrete path for this backend."""
+    if interpret is not None:  # legacy flag wins when given explicitly
+        return "interpret" if interpret else "pallas"
+    if dispatch != "auto":
+        if dispatch not in ("pallas", "interpret", "reference"):
+            raise ValueError(
+                f"unknown dispatch {dispatch!r}; "
+                "expected 'auto', 'pallas', 'interpret' or 'reference'"
+            )
+        return dispatch
+    # Off-TPU the interpreter is per-element slow and the jnp reference
+    # is bit-identical by contract (tests/test_kernels.py), so serving
+    # hot paths (the integer classifier tick) auto-select the reference.
+    return "pallas" if jax.default_backend() == "tpu" else "reference"
+
+
 def intgemm(
     x: jnp.ndarray,  # (M, K) int (14-bit activation codes)
     w: jnp.ndarray,  # (K, N) int8 weight codes
@@ -29,14 +69,28 @@ def intgemm(
     block_n: int = 128,
     block_k: int = 128,
     interpret: Optional[bool] = None,
+    dispatch: str = "auto",
 ) -> jnp.ndarray:
     """Saturating-24-bit int matmul, any (M, K, N) via zero padding."""
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    path = resolve_intgemm_dispatch(dispatch, interpret)
+    if path == "reference":
+        return intgemm_ref(x, w)
+    run_interpret = path == "interpret"
     m, k = x.shape
     n = w.shape[1]
     pm, pk, pn = (-m) % block_m, (-k) % block_k, (-n) % block_n
     xp = jnp.pad(x.astype(jnp.int32), ((0, pm), (0, pk)))
     wp = jnp.pad(w.astype(jnp.int32), ((0, pk), (0, pn)))
-    out = _intgemm_jit(xp, wp, block_m, block_n, block_k, interpret)
+    if jax.core.trace_state_clean():
+        out = _intgemm_jit(
+            xp, wp, block_m, block_n, block_k, run_interpret
+        )
+    else:
+        # already under an outer trace: inline the kernel call so the
+        # caller's jit compiles one program (no nested-jit boundary)
+        out = intgemm_pallas(
+            xp, wp,
+            block_m=block_m, block_n=block_n, block_k=block_k,
+            interpret=run_interpret,
+        )
     return out[:m, :n]

@@ -1,4 +1,12 @@
-"""Oracle: exact int32 matmul with final 24-bit saturation."""
+"""Oracle: exact int32 matmul with final 24-bit saturation.
+
+Exactness bound: products of 14-bit activation codes and 8-bit weight
+codes are < 2^20, so the int32 accumulator is exact for K < 2^11 —
+far above the classifier's K <= 96 — and the only nonlinearity is the
+final saturation to the IC's 24-bit HPE accumulator range. This is the
+off-TPU serving path of the integer classifier (`repro.core.gru_int`)
+and the bit-identity reference the Pallas kernel is tested against.
+"""
 
 from __future__ import annotations
 

@@ -1,8 +1,24 @@
-"""int8 serving weights — the paper's 8-bit weight memory applied at
-framework scale. Expert FFN banks (the 1T MoE's ~98% of bytes) are
-stored as int8 codes + one fp32 absmax scale per last-dim row and
-dequantized on the fly inside the expert matmuls; decode-step HBM
-traffic (which IS the MoE decode roofline, EXPERIMENTS §Perf B1) halves.
+"""Serving-side parameter quantization.
+
+Two independent consumers share this module:
+
+  1. **KWS classifier (the paper's datapath, primary).**
+     `quantize_classifier` converts the float/QAT GRU-FC parameters of
+     `repro.core.gru` into a `repro.core.gru_int.QuantizedClassifier`:
+     int8 weight codes, frac-15 accumulator-resident bias codes — the
+     ~24 KB WMEM image the IC actually stores (Sections II, III-E).
+     The integer engine evaluated on these codes is bit-identical to
+     the QAT fake-quant forward (tests/test_classifier_int.py); the
+     conversion uses the same round-to-nearest-even the QAT fake-quant
+     applies, so quantize -> dequantize lands exactly on the values the
+     QAT forward already sees.
+
+  2. **LM expert banks (legacy, from the framework-scale LM side).**
+     `quantize_expert_params` / `quantize_expert_shapes` store MoE
+     expert FFN banks as int8 codes + one fp32 absmax scale per
+     last-dim row, dequantized on the fly inside the expert matmuls to
+     halve decode-step HBM traffic. Used by the pjit'd LM serving
+     programs of `repro.serving.serve_loop` (`serve_quant`).
 """
 
 from __future__ import annotations
@@ -11,6 +27,76 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+
+from repro.core import quant
+from repro.core.gru import GRUConfig
+from repro.core.gru_int import QuantizedClassifier
+
+__all__ = [
+    "quantize_classifier",
+    "dequant_weight",
+    "quantize_expert_params",
+    "quantize_expert_shapes",
+]
+
+
+# --------------------------------------------------------------------------
+# KWS classifier -> integer codes (the paper's WMEM image)
+# --------------------------------------------------------------------------
+
+def _w_codes(w: jnp.ndarray) -> jnp.ndarray:
+    """Float weights -> int8 codes on the paper's fixed frac-7 grid.
+
+    Identical rounding to `quant.fake_quant(w, WEIGHT_INT8)`, so the
+    integer engine consumes exactly the weights the QAT forward sees.
+    """
+    return quant.quantize_int(w, quant.WEIGHT_INT8, jnp.int8)
+
+
+def _b_codes(b: jnp.ndarray) -> jnp.ndarray:
+    """Float biases -> int32 codes at the accumulator scale (frac 15)."""
+    return quant.quantize_int(b, quant.BIAS_Q8_15, jnp.int32)
+
+
+def quantize_classifier(params: Any, config: GRUConfig) -> QuantizedClassifier:
+    """Float/QAT GRU-FC params -> `QuantizedClassifier` integer codes.
+
+    ``params`` is the `repro.core.gru.init_gru_classifier` dict (or any
+    trained instance of it); ``config`` is the `GRUConfig` the params
+    were built for (checked against the param geometry — a mismatch
+    would otherwise surface as silently wrong codes). The result is a
+    pytree of int8/int32 buffers only — safe to donate through the
+    fused serving tick and to keep device-resident.
+    """
+    if len(params["gru"]) != config.num_layers:
+        raise ValueError(
+            f"params have {len(params['gru'])} GRU layers, config says "
+            f"{config.num_layers}"
+        )
+    if params["gru"][0]["w_h"].shape[0] != config.hidden_dim:
+        raise ValueError(
+            f"params hidden_dim {params['gru'][0]['w_h'].shape[0]} != "
+            f"config.hidden_dim {config.hidden_dim}"
+        )
+    gru = tuple(
+        {
+            "w_i": _w_codes(layer["w_i"]),
+            "w_h": _w_codes(layer["w_h"]),
+            "b_i": _b_codes(layer["b_i"]),
+            "b_h": _b_codes(layer["b_h"]),
+        }
+        for layer in params["gru"]
+    )
+    return QuantizedClassifier(
+        gru=gru,
+        fc_w=_w_codes(params["fc"]["w"]),
+        fc_b=_b_codes(params["fc"]["b"]),
+    )
+
+
+# --------------------------------------------------------------------------
+# LM MoE expert banks -> int8 + absmax row scales (legacy LM serving)
+# --------------------------------------------------------------------------
 
 _QUANT_NAMES = ("w_up", "w_gate", "w_down")
 

@@ -12,7 +12,11 @@ frame (C,) OR a raw 16 ms audio hop (`pipeline.chunk_samples` samples at
 fs_audio); raw audio is pushed through the pipeline's registered
 `FeatureFrontend` (software / hardware-sim / Pallas TDC) with per-stream
 filter + SRO-phase carry, so the server is end-to-end audio-in,
-posteriors-out. This is the serve-side example driver
+posteriors-out. The GRU step itself runs through the pipeline's
+registered `ClassifierBackend` (float / qat / integer): with
+``classifier="integer"`` the tick consumes int8 weight codes and
+int32 Q6.8 hidden-state codes — the IC's WMEM-resident arithmetic,
+bit-identical to the QAT path. This is the serve-side example driver
 (examples/serve_streaming.py).
 
 The whole per-tick device program is ONE fused jit (`_fused_tick`):
@@ -168,7 +172,10 @@ def lower_prefill(arch_cfg, rules: ShardingRules, shape_spec):
 class ServerState:
     """All per-slot device state of a `StreamingKWSServer`, as one pytree.
 
-    gru    — per-layer GRU hidden states, each (max_streams, H).
+    gru    — per-layer GRU hidden states, each (max_streams, H):
+             float32 for the float/qat classifier backends, int32 Q6.8
+             codes for "integer" (the backend owns the representation;
+             masking, donation, and slot resets are dtype-agnostic).
     carry  — frontend streaming carry (filter / SRO-phase state), a dict
              of (max_streams, ...) arrays from `streaming_features_init`.
     scores — exponentially smoothed posteriors, (max_streams, K).
@@ -261,7 +268,10 @@ class StreamingKWSServer:
     def __init__(self, pipeline, params, max_streams: int = 256,
                  smoothing: float = 0.7, state=None):
         self.pipeline = pipeline
-        self.params = params
+        # Backend-shape the params once (e.g. classifier="integer"
+        # quantizes to the int8/int32 `QuantizedClassifier` here, so
+        # every tick runs on weight codes); float/qat pass through.
+        self.params = pipeline.prepare_params(params)
         self.max_streams = max_streams
         self.smoothing = smoothing
         # frontend state (norm stats / calibration); default = the

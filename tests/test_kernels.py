@@ -5,6 +5,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from _hypothesis_compat import given, settings, st
+
 from repro.core.fex import FExConfig
 from repro.core.filters import design_filterbank
 from repro.core.tdfex import TDFExConfig, draw_chip
@@ -92,6 +94,10 @@ def test_gru_nonzero_initial_state():
 
 # ---------------- intgemm ----------------
 
+# dispatch="interpret" forces the Pallas kernel body (under the
+# interpreter off-TPU) — the auto path resolves to the jnp reference on
+# CPU, which would make a kernel-vs-reference comparison vacuous.
+
 @pytest.mark.parametrize("m,k,n", [
     (1, 16, 12),
     (7, 100, 30),
@@ -101,16 +107,67 @@ def test_gru_nonzero_initial_state():
 def test_intgemm_exact_sweep(m, k, n):
     x = jnp.asarray(RNG.integers(-8191, 8192, (m, k)), jnp.int32)
     w = jnp.asarray(RNG.integers(-128, 128, (k, n)), jnp.int32)
-    assert bool((intgemm(x, w) == intgemm_ref(x, w)).all())
+    out = intgemm(x, w, dispatch="interpret")
+    assert bool((out == intgemm_ref(x, w)).all())
 
 
 def test_intgemm_saturates_at_24bit():
     x = jnp.full((8, 512), 8191, jnp.int32)
     w = jnp.full((512, 8), 127, jnp.int32)
-    out = intgemm(x, w)
+    out = intgemm(x, w, dispatch="interpret")
     assert int(out[0, 0]) == 2**23 - 1
-    out2 = intgemm(x, -w)
+    out2 = intgemm(x, -w, dispatch="interpret")
     assert int(out2[0, 0]) == -(2**23)
+
+
+def test_intgemm_dispatch_paths_agree():
+    """reference and interpret dispatch are the same function; auto off
+    TPU resolves to reference and must inline under an outer jit."""
+    x = jnp.asarray(RNG.integers(-8191, 8192, (5, 33)), jnp.int32)
+    w = jnp.asarray(RNG.integers(-128, 128, (33, 20)), jnp.int32)
+    ref = np.asarray(intgemm(x, w, dispatch="reference"))
+    itp = np.asarray(intgemm(x, w, dispatch="interpret"))
+    auto = np.asarray(intgemm(x, w))
+    np.testing.assert_array_equal(ref, itp)
+    np.testing.assert_array_equal(ref, auto)
+    inside = np.asarray(jax.jit(lambda a, b: intgemm(a, b))(x, w))
+    np.testing.assert_array_equal(ref, inside)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(min_value=1, max_value=17),
+    k=st.integers(min_value=1, max_value=700),
+    n=st.integers(min_value=1, max_value=33),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    full_scale=st.booleans(),
+)
+def test_intgemm_matches_integer_oracle_property(m, k, n, seed, full_scale):
+    """Property sweep: the Pallas kernel body (interpret) and the jnp
+    reference both match an exact int64 numpy oracle bit-for-bit across
+    odd/unpadded (M, K, N) shapes, including magnitudes that drive the
+    accumulator to (and past) the 24-bit saturation rails (skipped when
+    the hypothesis test extra is absent)."""
+    rng = np.random.default_rng(seed)
+    if full_scale:
+        # near-24-bit accumulators: full-range 14-bit x 8-bit codes,
+        # |sum| up to k * 2^20 — saturation binds for k >= 8
+        x = rng.integers(-8191, 8192, (m, k))
+        w = rng.integers(-128, 128, (k, n))
+    else:
+        x = rng.integers(-512, 513, (m, k))
+        w = rng.integers(-128, 128, (k, n))
+    oracle = np.clip(
+        x.astype(np.int64) @ w.astype(np.int64), -(2**23), 2**23 - 1
+    ).astype(np.int32)
+    xj = jnp.asarray(x, jnp.int32)
+    wj = jnp.asarray(w, jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(intgemm(xj, wj, dispatch="reference")), oracle
+    )
+    np.testing.assert_array_equal(
+        np.asarray(intgemm(xj, wj, dispatch="interpret")), oracle
+    )
 
 
 # ---------------- tdc ----------------
@@ -220,4 +277,5 @@ def test_gru_sequence_dtypes(dtype, tol):
 def test_intgemm_input_dtypes(in_dtype):
     x = jnp.asarray(RNG.integers(-8191, 8192, (4, 64)), in_dtype)
     w = jnp.asarray(RNG.integers(-128, 128, (64, 16)), jnp.int8)
-    assert bool((intgemm(x, w) == intgemm_ref(x, w)).all())
+    out = intgemm(x, w, dispatch="interpret")
+    assert bool((out == intgemm_ref(x, w)).all())

@@ -29,7 +29,7 @@ def _pipeline_with_stats(audio):
     # bootstrap pass (no normalizer) records FV_Raw to fit mu/sigma,
     # mirroring the chip's recording flow (Section III-F)
     boot = KWSPipeline(KWSPipelineConfig(use_norm=False))
-    _, fv_raw = boot.features_software(audio)
+    _, fv_raw = boot.features(audio)
     fv_log = quant.log_compress_lut(fv_raw, 12, 10)
     stats = fit_norm_stats(fv_log)
     return KWSPipeline(KWSPipelineConfig(), norm_stats=stats)
@@ -71,18 +71,37 @@ def _hops(pipe, n, seed=0):
 def test_pipeline_features_and_logits_shapes():
     audio = _audio(batch=4)
     pipe = _pipeline_with_stats(audio)
-    fv, raw = pipe.features_software(audio)
+    fv, raw = pipe.features(audio)
     assert fv.shape == (4, 62, 16) and raw.shape == (4, 62, 16)
     params = pipe.init_params(jax.random.PRNGKey(0))
     logits = pipe.logits(params, fv)
     assert logits.shape == (4, 12)
 
 
+def test_deprecated_shims_warn():
+    """The pre-registry shims must emit DeprecationWarning pointing at
+    the CHANGES.md migration table (they were silent before)."""
+    audio = _audio(batch=1, samples=2048)
+    pipe = _pipeline_with_stats(audio)
+    with pytest.warns(DeprecationWarning, match="CHANGES.md"):
+        pipe.features_software(audio)
+    from repro.core.pipeline import record_features_hardware
+    from repro.core.tdfex import TDFExConfig
+
+    tdcfg = TDFExConfig()
+    c = tdcfg.fex.num_channels
+    with pytest.warns(DeprecationWarning, match="CHANGES.md"):
+        record_features_hardware(
+            np.asarray(audio), tdcfg, None,
+            jnp.full((c,), tdcfg.beta_nominal), jnp.ones((c,)),
+        )
+
+
 def test_streaming_matches_batch_inference():
     audio = _audio(seed=1)
     pipe = _pipeline_with_stats(audio)
     params = pipe.init_params(jax.random.PRNGKey(1))
-    fv, _ = pipe.features_software(audio)
+    fv, _ = pipe.features(audio)
     batch_logits = pipe.logits(params, fv)
     states = pipe.streaming_init(2)
     for t in range(fv.shape[1]):
