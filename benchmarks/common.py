@@ -173,9 +173,11 @@ def percentile_stats(latencies_s) -> Dict[str, float]:
       backend        jax backend the sweep ran on ("cpu" / "tpu" / ...)
       frontend       registered FeatureFrontend of the benched pipeline
       classifiers    registered ClassifierBackend keys the sweep covered
+      devices        device counts the sweep covered (counts > 1 bench
+                     the stream-parallel server on a ("stream",) mesh)
       quick          True when the quick (CI-sized) sweep ran
-      results[]      one entry per (classifier, mode, kind, max_streams,
-                     occupancy):
+      results[]      one entry per (classifier, mode, kind, devices,
+                     max_streams, occupancy):
         classifier     registered ClassifierBackend of the point: "qat"
                        (fake-quant float tick) or "integer" (bit-exact
                        int8/Q6.8 engine, weight codes resident);
@@ -189,6 +191,11 @@ def percentile_stats(latencies_s) -> Dict[str, float]:
                        (isolates serving-path overhead), "audio" = raw
                        16 ms hops (adds the frontend filter scan, a
                        cost shared by every mode)
+        devices        device count the row ran on; > 1 means the slot
+                       axis was sharded over a ("stream",) mesh (bit-
+                       identical to devices=1 — the row measures pure
+                       throughput, tests/test_serve_sharded.py proves
+                       the equality)
         max_streams    server slot capacity for the point
         occupancy      fraction of slots with an open, submitting stream
         active_streams occupancy * max_streams, rounded, >= 1
@@ -197,10 +204,16 @@ def percentile_stats(latencies_s) -> Dict[str, float]:
         streams_per_s  ticks_per_s * active_streams (stream-frames/sec)
         p50_ms/p99_ms  per-tick wall latency percentiles
         mean_ms        mean per-tick wall latency
+      scaling[]      per device count: sustained scan-fv ticks/sec at
+                     256 streams and the ratio vs the devices=1 row
+                     (on emulated CPU meshes this measures SPMD
+                     overhead, on real multi-chip platforms the
+                     stream-parallel scaling curve)
       claim          the checked headline ("ok" bool): sustained
                      fused-tick throughput (scan driver) >= 5x legacy
-                     ticks/sec at 256 streams, full occupancy, fv kind;
-                     "speedup_live" carries the per-call fused ratio
+                     ticks/sec at 256 streams, full occupancy, fv kind,
+                     devices=1; "speedup_live" carries the per-call
+                     fused ratio
     """
     lat = np.asarray(latencies_s, np.float64) * 1e3
     return {

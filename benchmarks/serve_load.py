@@ -31,6 +31,17 @@ pre-refactor path had no integer engine), so the headline claim is
 unchanged; integer rows quantify the cost/benefit of code-domain
 serving on this backend.
 
+Devices (``--devices``, default "auto"): every row records the device
+count it ran on. Counts > 1 build the server on a ``("stream",)`` mesh
+(the slot axis sharded block-wise, params replicated — bit-identical to
+the single-device tick, see tests/test_serve_sharded.py) and are swept
+for the fused/scan modes at 256+ streams, quantifying stream-parallel
+scaling. "auto" sweeps 1 plus every power-of-two count the platform
+exposes; emulate a multi-device host on CPU with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (the CI slow job
+records a devices=2 row this way). The headline claim stays pinned to
+devices=1 so it is comparable across platforms.
+
 Writes ``BENCH_serve.json`` (fields documented in benchmarks/common.py)
 and checks the claim: at 256 streams, full occupancy, FV_Norm ticks, the
 fused tick body sustains >= 5x the legacy path's ticks/sec. The claimed
@@ -43,6 +54,7 @@ by dispatch/host overhead only, since both paths pay the same GRU
 compute per tick on CPU).
 
   PYTHONPATH=src python -m benchmarks.serve_load [--classifier all]
+      [--devices auto|1|1,2,...]
 """
 
 from __future__ import annotations
@@ -183,12 +195,14 @@ def _timed(fn):
     return time.perf_counter() - t0
 
 
-def _bench_mode(mode, kind, pipe, params, max_streams, occupancy, n_ticks):
+def _bench_mode(mode, kind, pipe, params, max_streams, occupancy, n_ticks,
+                devices=1):
     n_active = max(1, int(round(max_streams * occupancy)))
     slabs, dicts = _traffic(pipe, max_streams, n_active, kind)
     n_var = len(slabs)
     lat = []
     if mode == "legacy":
+        assert devices == 1, "legacy path predates the serving mesh"
         srv = _LegacyStreamingServer(pipe, params, max_streams)
         for sid in range(n_active):
             srv.open_stream(sid)
@@ -199,7 +213,9 @@ def _bench_mode(mode, kind, pipe, params, max_streams, occupancy, n_ticks):
             if t >= WARMUP:
                 lat.append(time.perf_counter() - t0)
     elif mode == "fused":
-        srv = StreamingKWSServer(pipe, params, max_streams=max_streams)
+        srv = StreamingKWSServer(
+            pipe, params, max_streams=max_streams, devices=devices
+        )
         for sid in range(n_active):
             srv.open_stream(sid)
         for t in range(WARMUP + n_ticks):
@@ -209,7 +225,9 @@ def _bench_mode(mode, kind, pipe, params, max_streams, occupancy, n_ticks):
             if t >= WARMUP:
                 lat.append(time.perf_counter() - t0)
     elif mode == "scan":
-        srv = StreamingKWSServer(pipe, params, max_streams=max_streams)
+        srv = StreamingKWSServer(
+            pipe, params, max_streams=max_streams, devices=devices
+        )
         for sid in range(n_active):
             srv.open_stream(sid)
         slab = np.stack(
@@ -233,6 +251,7 @@ def _bench_mode(mode, kind, pipe, params, max_streams, occupancy, n_ticks):
         "classifier": pipe.config.classifier_key,
         "mode": mode,
         "kind": kind,
+        "devices": devices,
         "max_streams": max_streams,
         "occupancy": occupancy,
         "active_streams": n_active,
@@ -243,8 +262,43 @@ def _bench_mode(mode, kind, pipe, params, max_streams, occupancy, n_ticks):
     }
 
 
-def run(classifiers=("qat", "integer")):
+def _auto_devices():
+    """[1] plus every power-of-two device count the platform exposes."""
+    visible = len(jax.devices())
+    counts = [1]
+    d = 2
+    while d <= visible:
+        counts.append(d)
+        d *= 2
+    return counts
+
+
+def run(classifiers=("qat", "integer"), devices=None):
+    if devices is None:
+        devices = _auto_devices()
     sweep_streams = [64, 256] if QUICK else [64, 256, 1024]
+    visible = len(jax.devices())
+    bad = [d for d in devices if d < 1 or d > visible]
+    if bad:
+        # fail before any row is benched — a mid-sweep ValueError from
+        # stream_mesh would throw away minutes of measurements
+        raise ValueError(
+            f"--devices {bad} invalid for this platform ({visible} "
+            f"visible device(s); emulate more with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=N)"
+        )
+    multi_sizes = [ms for ms in sweep_streams if ms >= 256]
+    useless = [
+        d for d in devices
+        if d > 1 and not any(ms % d == 0 for ms in multi_sizes)
+    ]
+    if useless:
+        # same fail-fast contract: a count that divides none of the
+        # multi-device stream sizes would silently produce zero rows
+        raise ValueError(
+            f"--devices {useless} divide none of the multi-device "
+            f"stream sizes {multi_sizes}; pick divisors of those"
+        )
     occupancies = [0.5, 1.0]
     results = []
     frontend = None
@@ -262,24 +316,38 @@ def run(classifiers=("qat", "integer")):
             for ms in sweep_streams:
                 for occ in occupancies:
                     for mode in modes:
-                        r = _bench_mode(
-                            mode, kind, pipe, params, ms, occ, N_TICKS
-                        )
-                        results.append(r)
-                        print(
-                            f"  {clf:7s} {kind:5s} {mode:6s} N={ms:5d} "
-                            f"occ={occ:.1f}: "
-                            f"{r['ticks_per_s']:8.1f} ticks/s  "
-                            f"p50 {r['p50_ms']:7.2f} ms  "
-                            f"p99 {r['p99_ms']:7.2f} ms  "
-                            f"({r['streams_per_s']:.0f} streams/s)"
-                        )
+                        # multi-device rows: the sharded fused tick /
+                        # scan at full occupancy and serving scale —
+                        # the stream-parallel scaling axis; everything
+                        # else stays on the devices=1 baseline, which
+                        # is always benched (the claim and the scaling
+                        # ratios are defined against it even when
+                        # --devices omits 1)
+                        devs = [1]
+                        if mode != "legacy" and ms >= 256 and occ == 1.0:
+                            devs = sorted(
+                                {1, *(d for d in devices if ms % d == 0)}
+                            )
+                        for d in devs:
+                            r = _bench_mode(
+                                mode, kind, pipe, params, ms, occ,
+                                N_TICKS, devices=d,
+                            )
+                            results.append(r)
+                            print(
+                                f"  {clf:7s} {kind:5s} {mode:6s} "
+                                f"N={ms:5d} occ={occ:.1f} dev={d}: "
+                                f"{r['ticks_per_s']:8.1f} ticks/s  "
+                                f"p50 {r['p50_ms']:7.2f} ms  "
+                                f"p99 {r['p99_ms']:7.2f} ms  "
+                                f"({r['streams_per_s']:.0f} streams/s)"
+                            )
 
-    def _pick(mode, kind, clf="qat"):
+    def _pick(mode, kind, clf="qat", devs=1):
         return next(
             (r for r in results
              if r["mode"] == mode and r["kind"] == kind
-             and r["classifier"] == clf
+             and r["classifier"] == clf and r["devices"] == devs
              and r["max_streams"] == 256 and r["occupancy"] == 1.0),
             None,
         )
@@ -323,16 +391,45 @@ def run(classifiers=("qat", "integer")):
             claim["integer_vs_qat_scan"] = (
                 int_scan["ticks_per_s"] / fused_scan["ticks_per_s"]
             )
+    # stream-parallel scaling summary: sustained scan-fv throughput at
+    # 256 streams per device count (vs the devices=1 row). On emulated
+    # CPU meshes the "devices" share one physical socket, so the ratio
+    # mostly measures SPMD overhead; on real multi-chip platforms it is
+    # the scaling curve.
+    scaling = []
+    for d in sorted({1, *devices}):
+        row = _pick("scan", "fv", classifiers[0], devs=d)
+        base = _pick("scan", "fv", classifiers[0], devs=1)
+        if row is None or base is None:
+            continue
+        scaling.append({
+            "devices": d,
+            "scan_fv_ticks_per_s": row["ticks_per_s"],
+            "vs_single_device": row["ticks_per_s"] / base["ticks_per_s"],
+        })
     payload = {
         "backend": jax.default_backend(),
         "frontend": frontend,
         "classifiers": list(classifiers),
+        # counts that actually produced rows (a requested count that
+        # divides none of the 256+ stream sizes is swept nowhere and
+        # must not be claimed in the artifact)
+        "devices": sorted({r["devices"] for r in results}),
         "quick": QUICK,
         "results": results,
+        "scaling": scaling,
         "claim": claim,
     }
     with open("BENCH_serve.json", "w") as f:
         json.dump(payload, f, indent=2)
+    for s in scaling:
+        if s["devices"] > 1:
+            print(
+                f"serve_load: {s['devices']} devices sustain "
+                f"{s['scan_fv_ticks_per_s']:.1f} scan ticks/s at 256 "
+                f"streams ({s['vs_single_device']:.2f}x the single-"
+                f"device program)"
+            )
     if claim is not None:
         extra = (
             f", integer scan {claim['integer_vs_qat_scan']:.2f}x qat"
@@ -364,8 +461,18 @@ if __name__ == "__main__":
         choices=["all", "qat", "integer", "float"],
         help="classifier backend(s) to sweep; 'all' = qat + integer",
     )
+    ap.add_argument(
+        "--devices", default="auto",
+        help="device counts to sweep, e.g. '1,2' ('auto' = 1 plus "
+             "every power-of-two count the platform exposes; emulate "
+             "with XLA_FLAGS=--xla_force_host_platform_device_count=N)",
+    )
     args = ap.parse_args()
     run(
         ("qat", "integer") if args.classifier == "all"
-        else (args.classifier,)
+        else (args.classifier,),
+        devices=(
+            None if args.devices == "auto"
+            else [int(d) for d in args.devices.split(",")]
+        ),
     )

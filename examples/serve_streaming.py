@@ -45,6 +45,14 @@ def main():
     ap.add_argument("--offline", action="store_true",
                     help="replay buffered audio via the lax.scan driver "
                          "(server.run) instead of live per-tick step calls")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="shard the stream-slot axis over the first N "
+                         "visible devices (('stream',) mesh; default: "
+                         "the largest visible count that divides "
+                         "--streams — 1 device keeps the plain "
+                         "single-device program). Emulate a mesh on "
+                         "CPU with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N")
     args = ap.parse_args()
 
     # corpus + norm stats + a model (random weights for the demo)
@@ -69,7 +77,16 @@ def main():
     params = pipe.init_params(jax.random.PRNGKey(0))
 
     audio = np.asarray(data["audio"][: args.streams], np.float32)
-    srv = StreamingKWSServer(pipe, params, max_streams=args.streams)
+    # devices=None shards over every visible device (single visible
+    # device -> the plain single-device program, bit-identically)
+    n_dev = args.devices
+    if n_dev is None:
+        n_dev = len(jax.devices())
+        while args.streams % n_dev:
+            n_dev -= 1  # largest visible count the slot axis divides
+    srv = StreamingKWSServer(
+        pipe, params, max_streams=args.streams, devices=n_dev
+    )
     for sid in range(args.streams):
         srv.open_stream(sid)
 
@@ -78,7 +95,8 @@ def main():
     mode = "offline lax.scan replay" if args.offline else "live fused ticks"
     print(f"serving {args.streams} streams x {n_frames} raw-audio hops "
           f"({hop} samples / 16 ms each) via frontend "
-          f"{args.frontend!r}, classifier {args.classifier!r} [{mode}]...")
+          f"{args.frontend!r}, classifier {args.classifier!r} "
+          f"on {srv.n_devices} device(s) [{mode}]...")
     t0 = time.time()
     detections = {}
     if args.offline:

@@ -69,7 +69,12 @@ class ClassifierBackend:
       prepare(params, cfg)        float training params -> the pytree
                                   this backend consumes (idempotent:
                                   already-prepared params pass through)
-      init_states(cfg, batch)     per-layer hidden state leaves
+      init_states(cfg, batch, device=None)
+                                  per-layer hidden state leaves;
+                                  ``device`` (a Device or Sharding)
+                                  places them at creation — sharded
+                                  servers pass a stream-axis
+                                  NamedSharding
       forward(params, fv, cfg)    (B, T, C) float FV_Norm ->
                                   (B, T, K) float logits
       step(params, states, fv_t, cfg)
@@ -89,7 +94,9 @@ class ClassifierBackend:
     def prepare(self, params: Any, cfg: GRUConfig) -> Any:
         return params
 
-    def init_states(self, cfg: GRUConfig, batch: int) -> List[jnp.ndarray]:
+    def init_states(
+        self, cfg: GRUConfig, batch: int, device: Any = None
+    ) -> List[jnp.ndarray]:
         raise NotImplementedError
 
     def forward(self, params, fv: jnp.ndarray, cfg: GRUConfig):
@@ -152,8 +159,8 @@ class _FloatBase(ClassifierBackend):
             return cfg
         return dataclasses.replace(cfg, quantized=self._quantized)
 
-    def init_states(self, cfg, batch):
-        return init_states(cfg, batch)
+    def init_states(self, cfg, batch, device=None):
+        return init_states(cfg, batch, device=device)
 
     def forward(self, params, fv, cfg):
         return gru_classifier_forward(params, fv, self._cfg(cfg))
@@ -202,10 +209,10 @@ class IntegerClassifier(ClassifierBackend):
 
         return quantize_classifier(params, cfg)
 
-    def init_states(self, cfg, batch):
+    def init_states(self, cfg, batch, device=None):
         from repro.core.gru_int import int_init_states
 
-        return int_init_states(cfg, batch)
+        return int_init_states(cfg, batch, device=device)
 
     def forward(self, params, fv, cfg):
         from repro.core import gru_int

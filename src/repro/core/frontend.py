@@ -83,11 +83,17 @@ def masked_select(mask: jnp.ndarray, new_tree: Any, old_tree: Any) -> Any:
     advances only for streams that submitted a frame this tick — the
     temporal-sparsity contract of frame-synchronous serving: an idle
     stream's state must be bit-identical before and after the tick.
+
+    Sharding-transparent: when the leaves (and the mask) are sharded
+    over their leading stream axis, the select is purely elementwise
+    per slot, so SPMD partitioning inserts no collectives and the
+    contract holds per shard — the broadcast below only ever expands
+    replicated (non-stream) trailing dims.
     """
     mask = jnp.asarray(mask)
 
     def sel(new, old):
-        m = mask.reshape(mask.shape + (1,) * (new.ndim - mask.ndim))
+        m = jnp.expand_dims(mask, tuple(range(mask.ndim, new.ndim)))
         return jnp.where(m, new, old)
 
     return jax.tree_util.tree_map(sel, new_tree, old_tree)
@@ -164,7 +170,12 @@ class FeatureFrontend:
 
       init_state(cfg, key)            -> FrontendState (calibration etc.)
       raw_codes(audio, cfg, state, key) -> (B, F, C) FV_Raw codes
-      streaming_init(cfg, batch)      -> carry pytree (dict of arrays)
+      streaming_init(cfg, batch, device=None)
+                                      -> carry pytree (dict of arrays);
+                                      ``device`` (Device or Sharding)
+                                      places the buffers at creation —
+                                      sharded servers pass a stream-axis
+                                      NamedSharding
       streaming_step(chunk, cfg, state, carry, key)
                                       -> (carry, (B, C) FV_Raw frame)
 
@@ -196,7 +207,9 @@ class FeatureFrontend:
     ) -> jnp.ndarray:
         raise NotImplementedError
 
-    def streaming_init(self, cfg, batch: int) -> Dict[str, jnp.ndarray]:
+    def streaming_init(
+        self, cfg, batch: int, device: Any = None
+    ) -> Dict[str, jnp.ndarray]:
         raise NotImplementedError
 
     def streaming_step(
@@ -322,11 +335,13 @@ class SoftwareFrontend(FeatureFrontend):
             frames, fexc.quant_bits, fexc.quant_full_scale
         )
 
-    def streaming_init(self, cfg, batch):
+    def streaming_init(self, cfg, batch, device=None):
         c = cfg.fex.num_channels
         # distinct buffers per leaf: the serving tick donates the whole
         # carry, and a shared zeros buffer cannot be donated twice
-        z = lambda: jnp.zeros((batch, c), jnp.float32)  # noqa: E731
+        z = lambda: jnp.zeros(  # noqa: E731
+            (batch, c), jnp.float32, device=device
+        )
         return {"s1": z(), "s2": z()}
 
     def streaming_step(self, chunk, cfg, state, carry, key=None):
@@ -414,10 +429,12 @@ class _HardwareBase(FeatureFrontend):
         beta, alpha = self._calibration(tdcfg, state)
         return counts_to_fv_raw(counts, tdcfg, beta, alpha)
 
-    def streaming_init(self, cfg, batch):
+    def streaming_init(self, cfg, batch, device=None):
         c = cfg.fex.num_channels
         # distinct buffers per leaf (donation-safe, see SoftwareFrontend)
-        z = lambda: jnp.zeros((batch, c), jnp.float32)  # noqa: E731
+        z = lambda: jnp.zeros(  # noqa: E731
+            (batch, c), jnp.float32, device=device
+        )
         # r: fractional phase carry of the 15-phase counter (counts);
         # j: the previous frame-edge phase jitter (counts), so keyed
         # streaming reproduces the batch path's SRO phase noise.

@@ -198,9 +198,14 @@ def gru_classifier_step(
     return new_states, logits
 
 
-def init_states(config: GRUConfig, batch: int) -> List[jnp.ndarray]:
+def init_states(
+    config: GRUConfig, batch: int, device=None
+) -> List[jnp.ndarray]:
+    """Per-layer hidden states; ``device`` (Device or Sharding) places
+    each buffer at creation — sharded servers pass a stream-axis
+    NamedSharding so no oversized single-device zeros is ever built."""
     return [
-        jnp.zeros((batch, config.hidden_dim), jnp.float32)
+        jnp.zeros((batch, config.hidden_dim), jnp.float32, device=device)
         for _ in range(config.num_layers)
     ]
 

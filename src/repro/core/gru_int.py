@@ -184,8 +184,12 @@ def int_gru_classifier_step(
     return new_states, logits
 
 
-def int_init_states(config: GRUConfig, batch: int) -> List[jnp.ndarray]:
+def int_init_states(
+    config: GRUConfig, batch: int, device=None
+) -> List[jnp.ndarray]:
+    """Per-layer int32 Q6.8 hidden-state codes; ``device`` as in
+    `repro.core.gru.init_states`."""
     return [
-        jnp.zeros((batch, config.hidden_dim), jnp.int32)
+        jnp.zeros((batch, config.hidden_dim), jnp.int32, device=device)
         for _ in range(config.num_layers)
     ]

@@ -131,10 +131,10 @@ class KWSPipeline:
         if norm_stats is not None:
             state = state.with_norm_stats(norm_stats)
         self.state = state
-        # memo for prepare_params: (params object, prepared pytree).
-        # The strong reference to the keys object keeps its id() from
-        # being recycled while the entry is alive.
-        self._prepared: Optional[Tuple[Any, Any]] = None
+        # memo for prepare_params: (params object, mesh, prepared
+        # pytree). The strong reference to the keys object keeps its
+        # id() from being recycled while the entry is alive.
+        self._prepared: Optional[Tuple[Any, Any, Any]] = None
 
     @property
     def norm_stats(self) -> Optional[FExNormStats]:
@@ -254,18 +254,33 @@ class KWSPipeline:
         backend converts via `prepare_params` at inference time)."""
         return init_gru_classifier(key, self.config.gru)
 
-    def prepare_params(self, params):
+    def prepare_params(self, params, mesh=None):
         """Float training params -> whatever the configured backend
         consumes (e.g. `QuantizedClassifier` integer codes for
         ``classifier="integer"``). Idempotent: already-prepared params
         pass through, so every public entry point below can call it.
         The last conversion is memoized by parameter identity, so
         per-frame callers (`streaming_step`) don't re-quantize the
-        whole parameter pytree every 16 ms tick."""
-        if self._prepared is not None and self._prepared[0] is params:
-            return self._prepared[1]
+        whole parameter pytree every 16 ms tick.
+
+        ``mesh`` (a serving `stream_mesh`) places the prepared pytree
+        replicated across every mesh device — weights are resident on
+        each shard of a stream-parallel server, never re-transferred
+        per tick."""
+        if (
+            self._prepared is not None
+            and self._prepared[0] is params
+            and self._prepared[1] is mesh
+        ):
+            return self._prepared[2]
         prepared = self.classifier.prepare(params, self.config.gru)
-        self._prepared = (params, prepared)
+        if mesh is not None:
+            from repro.distributed.sharding import replicated_shardings
+
+            prepared = jax.device_put(
+                prepared, replicated_shardings(prepared, mesh)
+            )
+        self._prepared = (params, mesh, prepared)
         return prepared
 
     @functools.partial(jax.jit, static_argnums=(0,))
@@ -305,10 +320,16 @@ class KWSPipeline:
         fexc = self.config.fex
         return int(round(fexc.fs_audio * fexc.frame_shift_ms / 1000.0))
 
-    def streaming_init(self, batch: int):
+    def streaming_init(self, batch: int, mesh=None):
         """Classifier (GRU) state for a batch of streams — float32 for
-        the float/qat backends, int32 Q6.8 codes for "integer"."""
-        return self.classifier.init_states(self.config.gru, batch)
+        the float/qat backends, int32 Q6.8 codes for "integer".
+
+        ``mesh`` (a serving `stream_mesh`) creates the state buffers
+        already sharded over their leading stream axis — no oversized
+        single-device allocation, no post-hoc reshard."""
+        return self.classifier.init_states(
+            self.config.gru, batch, device=self._stream_sharding(mesh)
+        )
 
     @functools.partial(jax.jit, static_argnums=(0,))
     def _streaming_step_jit(self, params, states, fv_t: jnp.ndarray):
@@ -320,9 +341,26 @@ class KWSPipeline:
             self.prepare_params(params), states, fv_t
         )
 
-    def streaming_features_init(self, batch: int):
-        """Frontend carry (filter / SRO phase state) for batch streams."""
-        return self.frontend.streaming_init(self.config, batch)
+    @staticmethod
+    def _stream_sharding(mesh):
+        """mesh -> NamedSharding over the leading stream axis of a
+        (batch, channels) state buffer; None stays None (default
+        single-device placement)."""
+        if mesh is None:
+            return None
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        from repro.distributed.sharding import STREAM_AXIS
+
+        return NamedSharding(mesh, PartitionSpec(STREAM_AXIS, None))
+
+    def streaming_features_init(self, batch: int, mesh=None):
+        """Frontend carry (filter / SRO phase state) for batch streams;
+        ``mesh`` shards the carry over its stream axis (see
+        `streaming_init`)."""
+        return self.frontend.streaming_init(
+            self.config, batch, device=self._stream_sharding(mesh)
+        )
 
     def streaming_features_apply(
         self,

@@ -14,10 +14,11 @@ through `param_specs` / `batch_specs` so train/serve/dry-run agree.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional, Tuple
+from typing import Any, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
@@ -30,6 +31,10 @@ __all__ = [
     "cache_specs",
     "make_mesh_context",
     "named",
+    "STREAM_AXIS",
+    "stream_mesh",
+    "stream_shardings",
+    "replicated_shardings",
 ]
 
 
@@ -190,6 +195,70 @@ def batch_specs(batch_shape: Any, rules: ShardingRules):
         return P(*([None] * leaf.ndim))
 
     return jax.tree.map(spec, batch_shape)
+
+
+# --------------------------------------------------------------------------
+# Stream-parallel serving mesh (KWS)
+# --------------------------------------------------------------------------
+#
+# The KWS server's unit of parallelism is the stream SLOT: every
+# `ServerState` leaf, input slab, and submitted mask leads with the
+# (max_streams,) slot axis, and slots are computationally independent
+# (per-stream GRU state, filter carry, scores — no cross-slot reduction
+# anywhere in the tick). That makes the slot axis embarrassingly
+# shardable: a 1-D ("stream",) mesh splits it block-wise over devices
+# while the classifier/frontend parameters replicate.
+
+STREAM_AXIS = "stream"
+
+
+def stream_mesh(
+    devices: Union[int, Sequence[Any], None] = None
+) -> Mesh:
+    """A 1-D ``("stream",)`` mesh for stream-parallel serving.
+
+    devices: an int (the first N visible devices), an explicit device
+    sequence, or None for every visible device. An int larger than the
+    visible device count is an error — serving capacity planning must
+    not silently degrade.
+    """
+    if devices is None:
+        devs = list(jax.devices())
+    elif isinstance(devices, int):
+        visible = list(jax.devices())
+        if devices < 1 or devices > len(visible):
+            raise ValueError(
+                f"stream_mesh(devices={devices}) but only "
+                f"{len(visible)} device(s) visible"
+            )
+        devs = visible[:devices]
+    else:
+        devs = list(devices)
+    if hasattr(jax, "make_mesh") and devs == list(jax.devices()):
+        return jax.make_mesh((len(devs),), (STREAM_AXIS,))
+    return Mesh(np.asarray(devs), (STREAM_AXIS,))
+
+
+def stream_shardings(tree: Any, mesh: Mesh):
+    """NamedShardings sharding every leaf's LEADING axis over
+    ``"stream"`` (scalars replicate) — the layout of `ServerState`
+    leaves and per-tick slot-major slabs. Scanned replay slabs
+    ``(n_ticks, max_streams, ...)`` shard their second axis instead;
+    the serving loop spells those specs out at its jit boundary."""
+
+    def spec(leaf):
+        ndim = getattr(leaf, "ndim", 0)
+        if ndim == 0:
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, P(STREAM_AXIS, *([None] * (ndim - 1))))
+
+    return jax.tree.map(spec, tree)
+
+
+def replicated_shardings(tree: Any, mesh: Mesh):
+    """Fully replicated NamedShardings (classifier params, frontend
+    calibration state, scalars)."""
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
 
 
 def cache_specs(cache_shape: Any, rules: ShardingRules, batch: int):

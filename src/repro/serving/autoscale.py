@@ -1,0 +1,107 @@
+"""Slab routing for sharded stream serving: stream_id -> (shard, slot).
+
+A sharded `StreamingKWSServer` splits its slot axis block-wise over a
+1-D ``("stream",)`` device mesh (`repro.distributed.sharding.
+stream_mesh`): global slots ``[k * slots_per_shard, (k + 1) *
+slots_per_shard)`` live on shard ``k``. Slot assignment therefore IS
+device placement, and a naive first-free allocation would pile every
+early stream onto shard 0 while the other devices idle.
+
+`StreamRouter` owns that assignment: `acquire` hands out the lowest
+free local slot on the least-loaded shard (ties to the lowest shard
+id), so concurrent streams spread round-robin across the mesh and the
+per-device batch stays balanced at any occupancy. With ``n_shards=1``
+it degrades to exactly the pre-sharding free list (lowest slot first)
+— the single-device server's slot order is unchanged.
+
+The router is pure host-side bookkeeping — deterministic, no device
+code — so a pure-Python lifecycle oracle can replay any open/close
+schedule and predict placement exactly (tests/test_serve_sharded.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import List
+
+__all__ = [
+    "SlotPlacement",
+    "StreamRouter",
+    "shard_of_slot",
+]
+
+
+def shard_of_slot(slot: int, max_streams: int, n_shards: int) -> int:
+    """Shard owning a global slot under block-wise ("stream",) sharding."""
+    if not 0 <= slot < max_streams:
+        raise ValueError(f"slot {slot} outside [0, {max_streams})")
+    return slot // (max_streams // n_shards)
+
+
+@dataclasses.dataclass(frozen=True)
+class SlotPlacement:
+    """Where a global slot lives on the mesh."""
+
+    shard: int
+    local_slot: int
+    slot: int  # global: shard * slots_per_shard + local_slot
+
+
+class StreamRouter:
+    """Balanced slot allocator over ``n_shards`` equal shard blocks."""
+
+    def __init__(self, max_streams: int, n_shards: int = 1):
+        if n_shards < 1:
+            raise ValueError("n_shards must be >= 1")
+        if max_streams % n_shards != 0:
+            raise ValueError(
+                f"max_streams={max_streams} must divide evenly over "
+                f"{n_shards} shard(s)"
+            )
+        self.max_streams = max_streams
+        self.n_shards = n_shards
+        self.slots_per_shard = max_streams // n_shards
+        self._free: List[List[int]] = [
+            list(range(self.slots_per_shard)) for _ in range(n_shards)
+        ]
+        for f in self._free:
+            heapq.heapify(f)
+
+    @property
+    def free_count(self) -> int:
+        return sum(len(f) for f in self._free)
+
+    def shard_loads(self) -> List[int]:
+        """Open slots per shard (the balance the round-robin fill keeps)."""
+        return [self.slots_per_shard - len(f) for f in self._free]
+
+    def placement(self, slot: int) -> SlotPlacement:
+        shard = shard_of_slot(slot, self.max_streams, self.n_shards)
+        return SlotPlacement(
+            shard=shard,
+            local_slot=slot - shard * self.slots_per_shard,
+            slot=slot,
+        )
+
+    def acquire(self) -> int:
+        """Lowest free local slot on the least-loaded shard (ties to the
+        lowest shard id). Raises RuntimeError at capacity."""
+        best = None
+        for shard, free in enumerate(self._free):
+            if not free:
+                continue
+            load = self.slots_per_shard - len(free)
+            if best is None or load < best[0]:
+                best = (load, shard)
+        if best is None:
+            raise RuntimeError("server at capacity")
+        shard = best[1]
+        local = heapq.heappop(self._free[shard])
+        return shard * self.slots_per_shard + local
+
+    def release(self, slot: int) -> None:
+        p = self.placement(slot)
+        if p.local_slot in self._free[p.shard]:
+            raise ValueError(f"slot {slot} already free")
+        heapq.heappush(self._free[p.shard], p.local_slot)

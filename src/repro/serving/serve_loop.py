@@ -30,6 +30,22 @@ the DeltaKWS deployment contract). `open_stream`/`close_stream` recycle
 slots from a free list, zeroing only the reused slot, and
 `StreamingKWSServer.run` replays buffered audio through a `lax.scan`
 over the same tick body for offline-throughput serving.
+
+Stream-parallel sharding: slots are computationally independent (no
+cross-slot reduction anywhere in the tick), so the slot axis shards
+block-wise over a 1-D ``("stream",)`` device mesh
+(`repro.distributed.sharding.stream_mesh`). With ``devices=N`` (or an
+explicit ``mesh=``) every `ServerState` leaf, input slab, and submitted
+mask carries a `NamedSharding` over its slot axis while classifier
+params and frontend calibration replicate; the fused tick, the scanned
+replay, and the jitted slot reset each lower to one SPMD program with
+the sharded state donated across calls. Slot assignment doubles as
+device placement, handled by `repro.serving.autoscale.StreamRouter`
+(round-robin fill keeps shards balanced). Per-slot math is unchanged by
+the partition, so sharded serving is BIT-identical to the single-device
+server (tests/test_serve_sharded.py proves it on an emulated CPU mesh).
+With one visible device the server falls back to exactly the
+pre-sharding single-device program.
 """
 
 from __future__ import annotations
@@ -41,18 +57,25 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
 
 from repro.core.frontend import masked_select
 
 from repro.distributed.sharding import (
+    STREAM_AXIS,
     ShardingRules,
     batch_specs,
     cache_specs,
     make_mesh_context,
     named,
     param_specs,
+    replicated_shardings,
+    stream_mesh,
+    stream_shardings,
 )
 from repro.models.registry import get_backbone
+from repro.serving.autoscale import StreamRouter
 
 Pytree = Any
 
@@ -259,54 +282,130 @@ class StreamingKWSServer:
     did not submit a frame this tick are masked out of every state
     update (frontend carry, GRU hidden state, scores).
 
-    Slot lifecycle: `open_stream` takes a slot from the free list and
-    zeroes only that slot's slices; `close_stream` returns it. `step`
-    drives one live tick from a {stream_id: frame} dict; `run` replays
-    pre-buffered audio through a `lax.scan` over the same tick body.
+    Slot lifecycle: `open_stream` takes a slot from the router's free
+    list and zeroes only that slot's slices; `close_stream` returns it.
+    `step` drives one live tick from a {stream_id: frame} dict; `run`
+    replays pre-buffered audio through a `lax.scan` over the same tick
+    body.
+
+    Sharding: ``devices=N`` (first N visible devices) or an explicit
+    ``mesh=`` (a 1-D `stream_mesh`) shards the slot axis of every state
+    buffer, slab, and mask over the mesh and replicates the params —
+    one SPMD program per tick, bit-identical to the single-device
+    server. ``devices=None`` with a single visible device (and a
+    size-1 mesh) falls back to the pre-sharding single-device path.
     """
 
     def __init__(self, pipeline, params, max_streams: int = 256,
-                 smoothing: float = 0.7, state=None):
+                 smoothing: float = 0.7, state=None, mesh=None,
+                 devices: Optional[int] = None):
+        if mesh is not None and devices is not None:
+            raise ValueError("pass mesh= or devices=, not both")
+        if mesh is None and devices is not None:
+            # stream_mesh is the single count-vs-visible validator; the
+            # size-1 fallback below then strips a one-device mesh
+            mesh = stream_mesh(devices)
+        if mesh is not None and mesh.devices.size == 1:
+            mesh = None  # single-device fallback: no SPMD plumbing
+        if mesh is not None and mesh.axis_names != (STREAM_AXIS,):
+            raise ValueError(
+                f"server mesh must be 1-D with axis named "
+                f"{STREAM_AXIS!r} (see stream_mesh); got "
+                f"{mesh.axis_names}"
+            )
+        self.mesh = mesh
+        self.n_devices = int(mesh.devices.size) if mesh is not None else 1
+        if max_streams % self.n_devices != 0:
+            raise ValueError(
+                f"max_streams={max_streams} must divide over "
+                f"{self.n_devices} devices"
+            )
         self.pipeline = pipeline
         # Backend-shape the params once (e.g. classifier="integer"
         # quantizes to the int8/int32 `QuantizedClassifier` here, so
         # every tick runs on weight codes); float/qat pass through.
-        self.params = pipeline.prepare_params(params)
+        # On a mesh the codes are placed replicated across every device.
+        self.params = pipeline.prepare_params(params, mesh=mesh)
         self.max_streams = max_streams
         self.smoothing = smoothing
         # frontend state (norm stats / calibration); default = the
-        # pipeline's bound state
+        # pipeline's bound state. Replicated on the mesh.
         self.frontend_state = (
             pipeline.state if state is None else state
         )
+        if mesh is not None:
+            self.frontend_state = jax.device_put(
+                self.frontend_state,
+                replicated_shardings(self.frontend_state, mesh),
+            )
+        scores_sharding = (
+            None if mesh is None
+            else NamedSharding(mesh, P(STREAM_AXIS, None))
+        )
         self.state = ServerState(
-            gru=tuple(pipeline.streaming_init(max_streams)),
-            carry=pipeline.streaming_features_init(max_streams),
+            gru=tuple(pipeline.streaming_init(max_streams, mesh=mesh)),
+            carry=pipeline.streaming_features_init(max_streams, mesh=mesh),
             scores=jnp.zeros(
                 (max_streams, pipeline.config.gru.num_classes),
                 jnp.float32,
+                device=scores_sharding,
             ),
         )
         self.active: Dict[int, int] = {}  # stream_id -> slot
-        self._free = list(range(max_streams))[::-1]
+        # slot allocation = device placement on a mesh; the router's
+        # round-robin fill keeps per-shard load balanced (and reduces
+        # to the lowest-free-slot order of the pre-sharding free list
+        # when n_shards == 1)
+        self.router = StreamRouter(max_streams, self.n_devices)
         # One compiled program per input kind; pipeline is closed over
-        # (static), state buffers are donated.
+        # (static), state buffers are donated. On a mesh every jit gets
+        # explicit in/out shardings so each lowers to one SPMD program
+        # over the ("stream",) axis with the state donated in place.
+        if mesh is None:
+            jit_kw = dict(donate_argnums=(1,))
+            tick_kw = run_kw = jit_kw
+            reset_kw = dict(donate_argnums=(0,))
+        else:
+            st_sh = stream_shardings(self.state, mesh)
+            rep = lambda t: replicated_shardings(t, mesh)  # noqa: E731
+            row = NamedSharding(mesh, P(STREAM_AXIS, None))
+            vec = NamedSharding(mesh, P(STREAM_AXIS))
+            seq_row = NamedSharding(mesh, P(None, STREAM_AXIS, None))
+            seq_vec = NamedSharding(mesh, P(None, STREAM_AXIS))
+            scalar = NamedSharding(mesh, P())
+            tick_kw = dict(
+                donate_argnums=(1,),
+                in_shardings=(
+                    rep(self.params), st_sh, row, vec,
+                    rep(self.frontend_state), scalar,
+                ),
+                out_shardings=(st_sh, row, vec),
+            )
+            run_kw = dict(
+                donate_argnums=(1,),
+                in_shardings=(
+                    rep(self.params), st_sh, seq_row, seq_vec,
+                    rep(self.frontend_state), scalar,
+                ),
+                out_shardings=(st_sh, seq_row, seq_vec),
+            )
+            reset_kw = dict(
+                donate_argnums=(0,),
+                in_shardings=(st_sh, scalar),
+                out_shardings=st_sh,
+            )
         self._tick_audio = jax.jit(
-            functools.partial(_fused_tick, pipeline, True),
-            donate_argnums=(1,),
+            functools.partial(_fused_tick, pipeline, True), **tick_kw
         )
         self._tick_fv = jax.jit(
-            functools.partial(_fused_tick, pipeline, False),
-            donate_argnums=(1,),
+            functools.partial(_fused_tick, pipeline, False), **tick_kw
         )
-        self._reset = jax.jit(_reset_slot, donate_argnums=(0,))
+        self._reset = jax.jit(_reset_slot, **reset_kw)
         self._run_audio = jax.jit(
-            functools.partial(_run_scan, pipeline, True),
-            donate_argnums=(1,),
+            functools.partial(_run_scan, pipeline, True), **run_kw
         )
         self._run_fv = jax.jit(
-            functools.partial(_run_scan, pipeline, False),
-            donate_argnums=(1,),
+            functools.partial(_run_scan, pipeline, False), **run_kw
         )
 
     # ---- compatibility views of the fused state ----
@@ -323,26 +422,31 @@ class StreamingKWSServer:
 
     @property
     def scores(self) -> np.ndarray:
-        """Smoothed per-slot posteriors as a host array (read-only view;
-        the authoritative copy lives in `self.state.scores`)."""
-        return np.asarray(self.state.scores)
+        """Smoothed per-slot posteriors as a host array.
+
+        An owned copy, not a view: `np.asarray` of a CPU device buffer
+        can be zero-copy, and the buffer it would alias is donated to
+        the next tick — a view could silently mutate under the caller
+        (see `step_batch`). The authoritative copy lives in
+        `self.state.scores`."""
+        return np.array(self.state.scores)
 
     # ---- slot lifecycle ----
 
     def open_stream(self, stream_id: int):
         if stream_id in self.active:
             raise ValueError(f"stream {stream_id} already open")
-        if not self._free:
-            raise RuntimeError("server at capacity")
-        slot = self._free.pop()
+        slot = self.router.acquire()  # raises RuntimeError at capacity
         self.active[stream_id] = slot
         # zero only the reused slot — concurrent streams' slices and the
-        # free slots' garbage are untouched (they are masked anyway)
+        # free slots' garbage are untouched (they are masked anyway).
+        # The slot index is traced (and replicated on a mesh), so
+        # open/close never recompiles and works across shard boundaries.
         self.state = self._reset(self.state, jnp.int32(slot))
 
     def close_stream(self, stream_id: int):
         slot = self.active.pop(stream_id)
-        self._free.append(slot)
+        self.router.release(slot)
 
     # ---- serving ----
 
@@ -391,16 +495,23 @@ class StreamingKWSServer:
         Returns (scores (max_streams, K), top (max_streams,)) as host
         arrays; rows of unsubmitted slots hold their previous values.
         """
+        slab, mask = jnp.asarray(slab), jnp.asarray(mask)
         tick = (
             self._tick_audio
-            if self._is_raw(int(np.shape(slab)[-1]))
+            if self._is_raw(int(slab.shape[-1]))
             else self._tick_fv
         )
         self.state, scores, top = tick(
-            self.params, self.state, jnp.asarray(slab), jnp.asarray(mask),
+            self.params, self.state, slab, mask,
             self.frontend_state, self.smoothing,
         )
-        return np.asarray(scores), np.asarray(top)
+        # np.array (owned copy), NOT np.asarray: the tick's scores
+        # output can alias the new state's scores buffer, and that
+        # buffer is DONATED to the next tick — a zero-copy view would
+        # be read-after-donation garbage the second time the caller
+        # looks at it. Copying (max_streams, K) floats per tick is
+        # noise next to the tick itself.
+        return np.array(scores), np.array(top)
 
     def step(self, frames: Dict[int, np.ndarray]) -> Dict[int, dict]:
         """frames: stream_id -> FV_Norm (C,) or raw audio hop (S,).
@@ -434,16 +545,19 @@ class StreamingKWSServer:
         Returns (scores_seq (n_ticks, N, K), tops (n_ticks, N)) as host
         arrays and advances the server state by n_ticks.
         """
+        slab, mask = jnp.asarray(slab), jnp.asarray(mask)
         run = (
             self._run_audio
-            if self._is_raw(int(np.shape(slab)[-1]))
+            if self._is_raw(int(slab.shape[-1]))
             else self._run_fv
         )
         self.state, scores_seq, tops = run(
-            self.params, self.state, jnp.asarray(slab), jnp.asarray(mask),
+            self.params, self.state, slab, mask,
             self.frontend_state, self.smoothing,
         )
-        return np.asarray(scores_seq), np.asarray(tops)
+        # owned copies, not views of donation-bound buffers (see
+        # step_batch)
+        return np.array(scores_seq), np.array(tops)
 
     def run(self, buffers: Dict[int, np.ndarray]) -> Dict[int, dict]:
         """Offline replay: buffered audio -> per-tick posteriors, scanned.

@@ -3,6 +3,17 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-# NOTE: no XLA_FLAGS here on purpose — tests run on the single real CPU
-# device; only launch/dryrun.py (and subprocess tests) use 512 fake
-# devices.
+# Emulate an 8-device host platform for the whole suite (must be set
+# before the first jax import anywhere in the test process): the
+# sharded-serving suite (tests/test_serve_sharded.py) proves the
+# stream-parallel server bit-identical to the single-device path on a
+# real multi-device mesh without TPU hardware, and everything else
+# simply runs on device 0 of the emulated platform. Guarded so a
+# user-set count (e.g. XLA_FLAGS="--xla_force_host_platform_device_count=2"
+# to reproduce a CI bench row) is never clobbered. Subprocess tests
+# (launch/dryrun.py, test_sharding_dryrun.py) overwrite XLA_FLAGS
+# themselves before importing jax, so inheriting this is harmless.
+_COUNT_FLAG = "--xla_force_host_platform_device_count"
+_existing = os.environ.get("XLA_FLAGS", "")
+if _COUNT_FLAG not in _existing:
+    os.environ["XLA_FLAGS"] = f"{_existing} {_COUNT_FLAG}=8".strip()

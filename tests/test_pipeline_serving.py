@@ -452,6 +452,42 @@ def test_tdc_dispatch_inside_jit_matches_outside():
 # ServerState pytree mechanics
 # --------------------------------------------------------------------------
 
+def test_step_twice_keeps_first_scores_single_device():
+    """Donation-hazard regression (single-device path; the sharded twin
+    lives in tests/test_serve_sharded.py): two ticks back-to-back
+    without fetching `scores` in between must leave the first tick's
+    returned arrays intact. The tick's scores output can alias the new
+    state's scores buffer, and that buffer is DONATED to the next tick
+    — a zero-copy `np.asarray` view of it would turn into
+    read-after-donation garbage, so the host boundary must hand out
+    owned copies."""
+    _, srv = _server(seed=17)
+    srv.open_stream(0)
+    srv.open_stream(1)
+    rng = np.random.default_rng(17)
+    mask = np.zeros((srv.max_streams,), bool)
+    mask[:2] = True
+    fv1 = rng.standard_normal((srv.max_streams, 16)).astype(np.float32)
+    fv2 = rng.standard_normal((srv.max_streams, 16)).astype(np.float32)
+    scores1, top1 = srv.step_batch(fv1, mask)
+    assert scores1.flags["OWNDATA"] and top1.flags["OWNDATA"]
+    snap_s, snap_t = scores1.copy(), top1.copy()
+    view = srv.scores  # the property must also be an owned copy
+    assert view.flags["OWNDATA"]
+    srv.step_batch(fv2, mask)  # donates the state scores1 could alias
+    srv.step_batch(fv1, mask)
+    np.testing.assert_array_equal(scores1, snap_s)
+    np.testing.assert_array_equal(top1, snap_t)
+    np.testing.assert_array_equal(view, snap_s)
+    # same guard on the scanned replay driver
+    slab = rng.standard_normal((2, srv.max_streams, 16)).astype(np.float32)
+    seq, tops = srv.run_batch(slab, np.stack([mask, mask]))
+    assert seq.flags["OWNDATA"] and tops.flags["OWNDATA"]
+    snap_seq = seq.copy()
+    srv.run_batch(slab, np.stack([mask, mask]))
+    np.testing.assert_array_equal(seq, snap_seq)
+
+
 def test_server_state_is_donation_safe_pytree():
     """Every ServerState leaf must be a distinct buffer (the fused tick
     donates the whole pytree) and must round-trip tree flatten."""

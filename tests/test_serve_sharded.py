@@ -1,0 +1,482 @@
+"""Sharded multi-device serving, proven bit-identical on an emulated mesh.
+
+tests/conftest.py forces an 8-device emulated CPU host platform (before
+the first jax import, guarded against a user-set flag), so this suite
+runs on any plain CPU runner. It proves the stream-parallel
+`StreamingKWSServer` (slot axis sharded over a 1-D ``("stream",)``
+mesh) is BIT-identical — `np.testing.assert_array_equal`, never
+allclose — to the single-device server for every classifier backend
+("float" / "qat" / "integer"), across live ticks (`step` /
+`step_batch`), the scanned replay (`run_batch`), idle-stream isolation,
+and slot-reuse hygiene across shard boundaries. A hypothesis property
+test drives random open/close/submit schedules against a pure-Python
+lifecycle oracle: a stream's scores depend only on its own submitted
+frames, never on other streams' traffic or its device placement. The
+donation-hazard regression (step twice without fetching scores in
+between) runs here for the sharded path and in
+tests/test_pipeline_serving.py for the single-device path.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quant
+from repro.core.fex import fit_norm_stats
+from repro.core.pipeline import KWSPipeline, KWSPipelineConfig
+from repro.distributed.sharding import STREAM_AXIS, stream_mesh
+from repro.serving.autoscale import StreamRouter, shard_of_slot
+from repro.serving.serve_loop import StreamingKWSServer
+
+from _hypothesis_compat import given, settings, st
+
+N_DEV = len(jax.devices())
+pytestmark = pytest.mark.skipif(
+    N_DEV < 2,
+    reason="needs a multi-device platform (conftest forces 8 emulated "
+    "CPU devices unless XLA_FLAGS overrides it)",
+)
+
+MAX_STREAMS = 16
+# largest power-of-two mesh (<= 8 devices) the slot axis divides, so a
+# user-forced odd device count (the conftest guard allows e.g. =6)
+# degrades to a smaller mesh instead of erroring the whole suite
+MESH_DEV = max(d for d in (2, 4, 8) if d <= min(8, N_DEV)) if N_DEV >= 2 else 1
+
+CLASSIFIERS = ("float", "qat", "integer")
+
+
+@pytest.fixture(scope="module")
+def norm_stats():
+    rng = np.random.default_rng(0)
+    audio = jnp.asarray(
+        rng.standard_normal((4, 16000)).astype(np.float32) * 0.05
+    )
+    boot = KWSPipeline(KWSPipelineConfig(use_norm=False))
+    _, raw = boot.features(audio)
+    return fit_norm_stats(quant.log_compress_lut(raw, 12, 10))
+
+
+@pytest.fixture(scope="module", params=CLASSIFIERS)
+def backend(request, norm_stats):
+    """(pipeline, params) per classifier backend, built once."""
+    pipe = KWSPipeline(
+        KWSPipelineConfig(classifier=request.param), norm_stats=norm_stats
+    )
+    return pipe, pipe.init_params(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def server_pair(backend):
+    """Matched (single-device, sharded) servers on the same params."""
+    pipe, params = backend
+    single = StreamingKWSServer(pipe, params, max_streams=MAX_STREAMS)
+    sharded = StreamingKWSServer(
+        pipe, params, max_streams=MAX_STREAMS, devices=MESH_DEV
+    )
+    return single, sharded
+
+
+def _reset_pair(pair):
+    """Close every open stream on both servers (fixtures are
+    module-scoped; open_stream zeroes the reused slot, so close+open is
+    a full per-example reset)."""
+    for srv in pair:
+        for sid in list(srv.active):
+            srv.close_stream(sid)
+
+
+def _state_leaves(srv):
+    return [
+        np.asarray(leaf).copy()
+        for leaf in jax.tree_util.tree_leaves(srv.state)
+    ]
+
+
+def _assert_states_identical(a, b):
+    for la, lb in zip(_state_leaves(a), _state_leaves(b)):
+        np.testing.assert_array_equal(la, lb)
+
+
+def _slot_slice(srv, sid):
+    slot = srv.active[sid]
+    return jax.tree_util.tree_map(
+        lambda t: np.asarray(t[slot]).copy(), srv.state
+    )
+
+
+# --------------------------------------------------------------------------
+# mesh construction + fallback
+# --------------------------------------------------------------------------
+
+def test_sharded_server_places_state_on_mesh(server_pair):
+    _, sharded = server_pair
+    assert sharded.n_devices == MESH_DEV
+    assert sharded.mesh is not None
+    assert sharded.mesh.axis_names == (STREAM_AXIS,)
+    for leaf in jax.tree_util.tree_leaves(sharded.state):
+        spec = leaf.sharding.spec
+        assert spec and spec[0] == STREAM_AXIS, spec
+        assert len(leaf.devices()) == MESH_DEV
+    # params replicate: every leaf lives whole on every device
+    for leaf in jax.tree_util.tree_leaves(sharded.params):
+        assert leaf.sharding.is_fully_replicated
+
+
+def test_single_visible_device_falls_back(backend):
+    pipe, params = backend
+    srv = StreamingKWSServer(pipe, params, max_streams=4, devices=1)
+    assert srv.mesh is None and srv.n_devices == 1
+    # a size-1 mesh also falls back to the plain single-device program
+    srv1 = StreamingKWSServer(
+        pipe, params, max_streams=4, mesh=stream_mesh(1)
+    )
+    assert srv1.mesh is None and srv1.n_devices == 1
+
+
+def test_constructor_validation(backend):
+    pipe, params = backend
+    with pytest.raises(ValueError, match="divide over"):
+        StreamingKWSServer(
+            pipe, params, max_streams=9, devices=MESH_DEV
+        )
+    with pytest.raises(ValueError, match="not both"):
+        StreamingKWSServer(
+            pipe, params, max_streams=8, mesh=stream_mesh(2), devices=2
+        )
+    with pytest.raises(ValueError, match="visible"):
+        StreamingKWSServer(
+            pipe, params, max_streams=8, devices=N_DEV + 1
+        )
+
+
+# --------------------------------------------------------------------------
+# bit-identity: sharded == single-device, all backends, all entry points
+# --------------------------------------------------------------------------
+
+def test_step_batch_bit_identical(server_pair):
+    """Live fused ticks (raw-audio and FV_Norm slabs, partial masks):
+    scores, argmax, and the full ServerState match bit for bit."""
+    single, sharded = server_pair
+    _reset_pair(server_pair)
+    pipe = single.pipeline
+    for srv in (single, sharded):
+        for sid in range(MAX_STREAMS):
+            srv.open_stream(sid)
+    rng = np.random.default_rng(1)
+    hop = pipe.chunk_samples
+    for t in range(3):  # raw-audio ticks, rotating partial masks
+        slab = rng.standard_normal((MAX_STREAMS, hop)).astype(np.float32)
+        slab *= 0.05
+        mask = np.ones(MAX_STREAMS, bool)
+        mask[t::3] = False
+        s_a, t_a = single.step_batch(slab, mask)
+        s_b, t_b = sharded.step_batch(slab, mask)
+        np.testing.assert_array_equal(s_a, s_b)
+        np.testing.assert_array_equal(t_a, t_b)
+    fv = rng.standard_normal((MAX_STREAMS, 16)).astype(np.float32)
+    s_a, t_a = single.step_batch(fv, np.ones(MAX_STREAMS, bool))
+    s_b, t_b = sharded.step_batch(fv, np.ones(MAX_STREAMS, bool))
+    np.testing.assert_array_equal(s_a, s_b)
+    np.testing.assert_array_equal(t_a, t_b)
+    _assert_states_identical(single, sharded)
+
+
+def test_run_batch_bit_identical(server_pair):
+    """The lax.scan replay lowers to one SPMD program whose whole
+    (n_ticks, N, K) trajectory matches the single-device scan."""
+    single, sharded = server_pair
+    _reset_pair(server_pair)
+    pipe = single.pipeline
+    for srv in (single, sharded):
+        for sid in range(MAX_STREAMS):
+            srv.open_stream(sid)
+    rng = np.random.default_rng(2)
+    hop = pipe.chunk_samples
+    slab = rng.standard_normal((4, MAX_STREAMS, hop)).astype(np.float32)
+    slab *= 0.05
+    mask = rng.random((4, MAX_STREAMS)) < 0.7
+    seq_a, tops_a = single.run_batch(slab, mask)
+    seq_b, tops_b = sharded.run_batch(slab, mask)
+    np.testing.assert_array_equal(seq_a, seq_b)
+    np.testing.assert_array_equal(tops_a, tops_b)
+    _assert_states_identical(single, sharded)
+
+
+def test_dict_step_bit_identical_across_placements(server_pair):
+    """`step` with {sid: frame} dicts: the sharded router places the
+    same stream ids on different slots/shards than the single-device
+    free list, yet every stream's posteriors match bit for bit —
+    placement independence."""
+    single, sharded = server_pair
+    _reset_pair(server_pair)
+    for srv in (single, sharded):
+        for sid in range(6):
+            srv.open_stream(sid)
+    # same ids, different slots (round-robin vs first-free)
+    assert single.active != sharded.active
+    rng = np.random.default_rng(3)
+    for _ in range(3):
+        frames = {
+            sid: rng.standard_normal(16).astype(np.float32)
+            for sid in range(6)
+        }
+        out_a = single.step(frames)
+        out_b = sharded.step(frames)
+        for sid in frames:
+            np.testing.assert_array_equal(
+                out_a[sid]["probs"], out_b[sid]["probs"]
+            )
+            assert out_a[sid]["top"] == out_b[sid]["top"]
+
+
+# --------------------------------------------------------------------------
+# isolation + slot hygiene across shard boundaries
+# --------------------------------------------------------------------------
+
+def test_idle_stream_isolation_across_shards(server_pair):
+    """A stream idling on one shard is bit-identical across ticks that
+    only touch streams on OTHER shards (the temporal-sparsity contract
+    survives partitioning)."""
+    _, sharded = server_pair
+    _reset_pair(server_pair)
+    # round-robin: sids 0..MESH_DEV-1 land one per shard
+    for sid in range(MESH_DEV):
+        sharded.open_stream(sid)
+    shards = {
+        sid: shard_of_slot(sharded.active[sid], MAX_STREAMS, MESH_DEV)
+        for sid in range(MESH_DEV)
+    }
+    assert sorted(shards.values()) == list(range(MESH_DEV))
+    rng = np.random.default_rng(4)
+    fv = rng.standard_normal(16).astype(np.float32)
+    sharded.step({sid: fv for sid in range(MESH_DEV)})
+    idle_before = _slot_slice(sharded, 0)
+    for _ in range(3):  # stream 0 (shard 0) idles; every other shard ticks
+        sharded.step({
+            sid: rng.standard_normal(16).astype(np.float32)
+            for sid in range(1, MESH_DEV)
+        })
+    idle_after = _slot_slice(sharded, 0)
+    jax.tree_util.tree_map(
+        np.testing.assert_array_equal, idle_before, idle_after
+    )
+
+
+def test_slot_reuse_hygiene_across_shards(server_pair):
+    """close -> reopen on a non-zero shard hands out a fully zeroed
+    slot while every other slot (on every shard) is untouched."""
+    _, sharded = server_pair
+    _reset_pair(server_pair)
+    for sid in range(MAX_STREAMS):
+        sharded.open_stream(sid)
+    rng = np.random.default_rng(5)
+    fv = rng.standard_normal((MAX_STREAMS, 16)).astype(np.float32)
+    sharded.step_batch(fv, np.ones(MAX_STREAMS, bool))
+    victim = next(
+        sid for sid in sharded.active
+        if shard_of_slot(sharded.active[sid], MAX_STREAMS, MESH_DEV)
+        == MESH_DEV - 1
+    )
+    victim_slot = sharded.active[victim]
+    before = _state_leaves(sharded)
+    sharded.close_stream(victim)
+    sharded.open_stream(999)  # only free slot -> must reuse it
+    assert sharded.active[999] == victim_slot
+    reused = _slot_slice(sharded, 999)
+    jax.tree_util.tree_map(
+        lambda t: np.testing.assert_array_equal(t, np.zeros_like(t)),
+        reused,
+    )
+    after = _state_leaves(sharded)
+    for la, lb in zip(before, after):
+        la[victim_slot] = 0  # the reused slot is the ONLY change
+        np.testing.assert_array_equal(la, lb)
+
+
+def test_router_round_robin_balance():
+    """Slot allocation keeps shard loads within 1 at every point of an
+    open/close sequence, and placement matches the block mapping."""
+    r = StreamRouter(MAX_STREAMS, MESH_DEV)
+    slots = []
+    for _ in range(MAX_STREAMS):
+        slot = r.acquire()
+        slots.append(slot)
+        loads = r.shard_loads()
+        assert max(loads) - min(loads) <= 1, loads
+        p = r.placement(slot)
+        assert p.shard == shard_of_slot(slot, MAX_STREAMS, MESH_DEV)
+        assert p.slot == slot
+    assert sorted(slots) == list(range(MAX_STREAMS))
+    with pytest.raises(RuntimeError, match="capacity"):
+        r.acquire()
+    # releases rebalance: freeing two slots on one shard makes it the
+    # next two allocation targets
+    shard0 = [s for s in slots if shard_of_slot(s, MAX_STREAMS, MESH_DEV) == 0]
+    for s in shard0[:2]:
+        r.release(s)
+    got = [r.acquire(), r.acquire()]
+    assert sorted(got) == sorted(shard0[:2])
+    # single-shard router preserves the pre-sharding lowest-first order
+    r1 = StreamRouter(4, 1)
+    assert [r1.acquire() for _ in range(4)] == [0, 1, 2, 3]
+
+
+# --------------------------------------------------------------------------
+# donation hazard (sharded path; single-device twin lives in
+# tests/test_pipeline_serving.py)
+# --------------------------------------------------------------------------
+
+def test_step_twice_keeps_first_scores_sharded(server_pair):
+    """Two ticks back-to-back without fetching `scores` in between: the
+    first tick's returned arrays must own their memory and stay intact
+    (a zero-copy view would alias a buffer donated to tick 2)."""
+    _, sharded = server_pair
+    _reset_pair(server_pair)
+    for sid in range(MAX_STREAMS):
+        sharded.open_stream(sid)
+    rng = np.random.default_rng(6)
+    mask = np.ones(MAX_STREAMS, bool)
+    fv1 = rng.standard_normal((MAX_STREAMS, 16)).astype(np.float32)
+    fv2 = rng.standard_normal((MAX_STREAMS, 16)).astype(np.float32)
+    s1, t1 = sharded.step_batch(fv1, mask)
+    assert s1.flags["OWNDATA"] and t1.flags["OWNDATA"]
+    snap_s, snap_t = s1.copy(), t1.copy()
+    view = sharded.scores
+    assert view.flags["OWNDATA"]
+    sharded.step_batch(fv2, mask)
+    sharded.step_batch(fv1, mask)
+    np.testing.assert_array_equal(s1, snap_s)
+    np.testing.assert_array_equal(t1, snap_t)
+    np.testing.assert_array_equal(view, snap_s)
+
+
+# --------------------------------------------------------------------------
+# property test: random lifecycles vs a pure-Python oracle
+# --------------------------------------------------------------------------
+
+class LifecycleOracle:
+    """Pure-Python model of the sharded server's stream lifecycles.
+
+    Tracks, with no device code: which streams are open, every frame
+    each stream submitted since it was (re)opened, and the slot each
+    stream must occupy (an independent reimplementation of the
+    round-robin placement). The expected posteriors for a stream are
+    then whatever the single-device engine produces for that stream's
+    OWN frame sequence alone — by construction independent of every
+    other stream's traffic and of device placement.
+    """
+
+    def __init__(self, max_streams, n_shards):
+        self.max_streams = max_streams
+        self.n_shards = n_shards
+        self.per_shard = max_streams // n_shards
+        self.free = [
+            sorted(range(s * self.per_shard, (s + 1) * self.per_shard))
+            for s in range(n_shards)
+        ]
+        self.slot_of = {}
+        self.frames = {}
+
+    def open(self, sid):
+        loads = [self.per_shard - len(f) for f in self.free]
+        shard = min(
+            (ld, s) for s, ld in enumerate(loads) if self.free[s]
+        )[1]
+        self.slot_of[sid] = self.free[shard].pop(0)
+        self.frames[sid] = []
+
+    def close(self, sid):
+        slot = self.slot_of.pop(sid)
+        shard = slot // self.per_shard
+        self.free[shard].append(slot)
+        self.free[shard].sort()
+        del self.frames[sid]
+
+    def submit(self, sid, frame):
+        self.frames[sid].append(frame)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    events=st.lists(
+        st.tuples(
+            st.booleans(),  # open a new stream before this tick?
+            st.booleans(),  # close the oldest open stream first?
+            st.integers(min_value=0, max_value=255),  # submit bitmask
+        ),
+        min_size=2,
+        max_size=6,
+    ),
+)
+def test_random_schedule_matches_lifecycle_oracle(
+    oracle_servers, seed, events
+):
+    """Random open/close/submit schedules: each open stream's scores
+    bit-match a single-device replay of its own recorded frames —
+    independent of other streams' traffic and of shard placement."""
+    sharded, reference = oracle_servers
+    for srv in (sharded, reference):
+        for sid in list(srv.active):
+            srv.close_stream(sid)
+    oracle = LifecycleOracle(sharded.max_streams, sharded.n_devices)
+    rng = np.random.default_rng(seed)
+    next_sid = 0
+
+    def do_open():
+        nonlocal next_sid
+        sharded.open_stream(next_sid)
+        oracle.open(next_sid)
+        next_sid += 1
+
+    do_open()
+    for want_open, want_close, submit_bits in events:
+        if want_close and len(oracle.slot_of) > 1:
+            victim = min(oracle.slot_of)
+            sharded.close_stream(victim)
+            oracle.close(victim)
+        if want_open and len(oracle.slot_of) < sharded.max_streams:
+            do_open()
+        open_sids = sorted(oracle.slot_of)
+        frames = {}
+        for i, sid in enumerate(open_sids):
+            if submit_bits >> (i % 8) & 1:
+                f = rng.standard_normal(16).astype(np.float32)
+                frames[sid] = f
+                oracle.submit(sid, f)
+        out = sharded.step(frames)
+        del out
+        # placement must match the oracle's independent reimplementation
+        assert {s: oracle.slot_of[s] for s in open_sids} == {
+            s: sharded.active[s] for s in open_sids
+        }
+    # every open stream's scores == single-device replay of its own frames
+    for sid in sorted(oracle.slot_of):
+        reference.open_stream(sid)
+        expected = np.zeros_like(
+            np.asarray(reference.state.scores[0])
+        )
+        for f in oracle.frames[sid]:
+            out = reference.step({sid: f})
+            expected = out[sid]["probs"]
+        got = sharded.scores[sharded.active[sid]]
+        np.testing.assert_array_equal(got, expected)
+        reference.close_stream(sid)
+
+
+@pytest.fixture(scope="module")
+def oracle_servers(norm_stats):
+    """(sharded 8-slot server, single-device 1-slot reference) on shared
+    qat params — module-scoped so hypothesis examples reuse the
+    compiled tick programs."""
+    pipe = KWSPipeline(
+        KWSPipelineConfig(classifier="qat"), norm_stats=norm_stats
+    )
+    params = pipe.init_params(jax.random.PRNGKey(7))
+    sharded = StreamingKWSServer(
+        pipe, params, max_streams=8, devices=MESH_DEV
+    )
+    reference = StreamingKWSServer(pipe, params, max_streams=1)
+    return sharded, reference
