@@ -141,7 +141,10 @@ def evaluate(model: Dict, feats: np.ndarray, labels: np.ndarray,
              batch: int = 128, classifier: Optional[str] = None):
     """Accuracy + confusion matrix through a registered classifier
     backend; ``classifier=None`` resolves from the model config (the
-    QAT path), ``"integer"`` runs the bit-exact int8/Q6.8 engine."""
+    QAT path), ``"integer"`` runs the bit-exact int8/Q6.8 engine. (The
+    ΔGRU θ sweep needs per-example MAC fractions as well, so it drives
+    `repro.core.gru_delta.delta_classifier_forward` directly — see
+    benchmarks/fig_delta_tradeoff.py.)"""
     gcfg = model["config"]
     backend = get_classifier(resolve_classifier_key(classifier, gcfg))
     params = backend.prepare(model["params"], gcfg)
@@ -173,16 +176,20 @@ def percentile_stats(latencies_s) -> Dict[str, float]:
       backend        jax backend the sweep ran on ("cpu" / "tpu" / ...)
       frontend       registered FeatureFrontend of the benched pipeline
       classifiers    registered ClassifierBackend keys the sweep covered
+      theta          ΔGRU threshold (Q6.8 value units) the delta rows
+                     ran at (--theta; dense rows are unaffected)
       devices        device counts the sweep covered (counts > 1 bench
                      the stream-parallel server on a ("stream",) mesh)
       quick          True when the quick (CI-sized) sweep ran
       results[]      one entry per (classifier, mode, kind, devices,
                      max_streams, occupancy):
         classifier     registered ClassifierBackend of the point: "qat"
-                       (fake-quant float tick) or "integer" (bit-exact
-                       int8/Q6.8 engine, weight codes resident);
-                       "legacy" mode exists only for "qat" (the
-                       pre-refactor path had no integer engine)
+                       (fake-quant float tick), "integer" (bit-exact
+                       int8/Q6.8 engine, weight codes resident), or
+                       "delta"/"delta-int" (temporal-sparsity ΔGRU at
+                       the sweep's theta); "legacy" mode exists only
+                       for "qat" (the pre-refactor path had no integer
+                       or delta engine)
         mode           "fused" (one jitted tick per step_batch call),
                        "legacy" (pre-refactor per-stream path), or
                        "scan" (run_batch lax.scan replay; per-tick
@@ -202,6 +209,14 @@ def percentile_stats(latencies_s) -> Dict[str, float]:
         n_ticks        measured ticks (after warmup)
         ticks_per_s    sustained tick throughput, 1 / mean(latency)
         streams_per_s  ticks_per_s * active_streams (stream-frames/sec)
+        sparsity       measured effective-MAC fraction, mean over the
+                       point's active streams (the `srv.sparsity`
+                       telemetry): < 1.0 for the ΔGRU backends when
+                       their traffic lets them skip, identically 1.0
+                       for dense backends, None for the legacy path
+                       (predates the telemetry)
+        theta          ΔGRU threshold of the point's pipeline (None for
+                       dense backends)
         p50_ms/p99_ms  per-tick wall latency percentiles
         mean_ms        mean per-tick wall latency
       scaling[]      per device count: sustained scan-fv ticks/sec at

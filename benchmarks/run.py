@@ -14,6 +14,7 @@ def main():
         fig18_audio,
         fig19_accuracy,
         fig20_snr,
+        fig_delta_tradeoff,
         serve_load,
         table1_fom,
         table2_system,
@@ -29,6 +30,7 @@ def main():
         ("fig2_ablation", fig2_ablation),
         ("fig19_accuracy", fig19_accuracy),
         ("fig20_snr", fig20_snr),
+        ("fig_delta_tradeoff", fig_delta_tradeoff),
         ("roofline", roofline_bench),
         ("serve_load", serve_load),
     ]

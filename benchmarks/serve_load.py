@@ -22,14 +22,19 @@ carry raw 16 ms hops (adds the frontend filter scan, identical compute
 in both paths, so the ratio there is bounded by the shared filter cost
 on CPU).
 
-Classifier backends (``--classifier``, default sweeps qat + integer):
-``qat`` is the fake-quant float tick; ``integer`` runs the bit-exact
-int8/Q6.8 engine (`repro.core.gru_int`) — weight codes resident, int32
-GRU state leaves in `ServerState` — through the same fused tick and
-scan drivers. ``legacy`` mode is benched only for ``qat`` (the
-pre-refactor path had no integer engine), so the headline claim is
-unchanged; integer rows quantify the cost/benefit of code-domain
-serving on this backend.
+Classifier backends (``--classifier``, default sweeps qat + integer +
+delta): ``qat`` is the fake-quant float tick; ``integer`` runs the
+bit-exact int8/Q6.8 engine (`repro.core.gru_int`) — weight codes
+resident, int32 GRU state leaves in `ServerState` — through the same
+fused tick and scan drivers; ``delta`` / ``delta-int`` run the
+temporal-sparsity ΔGRU engine (`repro.core.gru_delta`) at the
+``--theta`` threshold, and their rows record the measured per-stream
+effective-MAC fraction (``sparsity``, mean over active streams — the
+`srv.sparsity` telemetry; dense backends record 1.0). ``legacy`` mode
+is benched only for ``qat`` (the pre-refactor path had no integer or
+delta engine), so the headline claim is unchanged; the other backends'
+rows quantify the cost/benefit of code-domain and sparsity-aware
+serving.
 
 Devices (``--devices``, default "auto"): every row records the device
 count it ran on. Counts > 1 build the server on a ``("stream",)`` mesh
@@ -54,7 +59,7 @@ by dispatch/host overhead only, since both paths pay the same GRU
 compute per tick on CPU).
 
   PYTHONPATH=src python -m benchmarks.serve_load [--classifier all]
-      [--devices auto|1|1,2,...]
+      [--devices auto|1|1,2,...] [--theta 0.25]
 """
 
 from __future__ import annotations
@@ -70,6 +75,7 @@ import numpy as np
 from benchmarks.common import QUICK, percentile_stats
 from repro.core import quant
 from repro.core.fex import fit_norm_stats
+from repro.core.gru_delta import DeltaConfig
 from repro.core.pipeline import KWSPipeline, KWSPipelineConfig
 from repro.serving.serve_loop import StreamingKWSServer
 
@@ -154,7 +160,7 @@ class _LegacyStreamingServer:
         return out
 
 
-def _pipeline(classifier=None):
+def _pipeline(classifier=None, theta=0.0):
     rng = np.random.default_rng(0)
     audio = jnp.asarray(
         rng.standard_normal((4, 16000)).astype(np.float32) * 0.05
@@ -162,8 +168,14 @@ def _pipeline(classifier=None):
     boot = KWSPipeline(KWSPipelineConfig(use_norm=False))
     _, raw = boot.features(audio)
     stats = fit_norm_stats(quant.log_compress_lut(raw, 12, 10))
+    delta = (
+        DeltaConfig(theta_x=theta, theta_h=theta)
+        if classifier in ("delta", "delta-int")
+        else None
+    )
     return KWSPipeline(
-        KWSPipelineConfig(classifier=classifier), norm_stats=stats
+        KWSPipelineConfig(classifier=classifier, delta=delta),
+        norm_stats=stats,
     )
 
 
@@ -201,6 +213,7 @@ def _bench_mode(mode, kind, pipe, params, max_streams, occupancy, n_ticks,
     slabs, dicts = _traffic(pipe, max_streams, n_active, kind)
     n_var = len(slabs)
     lat = []
+    srv = None
     if mode == "legacy":
         assert devices == 1, "legacy path predates the serving mesh"
         srv = _LegacyStreamingServer(pipe, params, max_streams)
@@ -247,6 +260,15 @@ def _bench_mode(mode, kind, pipe, params, max_streams, occupancy, n_ticks,
         raise ValueError(mode)
     stats = percentile_stats(lat)
     ticks_per_s = 1.0 / float(np.mean(lat))
+    # measured temporal sparsity of this point's traffic: mean
+    # effective-MAC fraction over the active streams (srv.sparsity
+    # telemetry; identically 1.0 for the dense backends, None for the
+    # pre-telemetry legacy path)
+    sparsity = None
+    if isinstance(srv, StreamingKWSServer):
+        slots = list(srv.active.values())
+        sparsity = float(np.mean(srv.sparsity[slots]))
+    delta_cfg = pipe.config.delta
     return {
         "classifier": pipe.config.classifier_key,
         "mode": mode,
@@ -258,6 +280,8 @@ def _bench_mode(mode, kind, pipe, params, max_streams, occupancy, n_ticks,
         "n_ticks": n_ticks,
         "ticks_per_s": ticks_per_s,
         "streams_per_s": ticks_per_s * n_active,
+        "sparsity": sparsity,
+        "theta": None if delta_cfg is None else delta_cfg.theta_x,
         **stats,
     }
 
@@ -273,7 +297,7 @@ def _auto_devices():
     return counts
 
 
-def run(classifiers=("qat", "integer"), devices=None):
+def run(classifiers=("qat", "integer", "delta"), devices=None, theta=0.25):
     if devices is None:
         devices = _auto_devices()
     sweep_streams = [64, 256] if QUICK else [64, 256, 1024]
@@ -303,7 +327,7 @@ def run(classifiers=("qat", "integer"), devices=None):
     results = []
     frontend = None
     for clf in classifiers:
-        pipe = _pipeline(clf)
+        pipe = _pipeline(clf, theta=theta)
         frontend = pipe.config.frontend
         params = pipe.init_params(jax.random.PRNGKey(0))
         for kind in ("fv", "audio"):
@@ -334,13 +358,18 @@ def run(classifiers=("qat", "integer"), devices=None):
                                 N_TICKS, devices=d,
                             )
                             results.append(r)
+                            sp = (
+                                f"  eff-MAC {r['sparsity']:.3f}"
+                                if r["theta"] is not None else ""
+                            )
                             print(
-                                f"  {clf:7s} {kind:5s} {mode:6s} "
+                                f"  {clf:9s} {kind:5s} {mode:6s} "
                                 f"N={ms:5d} occ={occ:.1f} dev={d}: "
                                 f"{r['ticks_per_s']:8.1f} ticks/s  "
                                 f"p50 {r['p50_ms']:7.2f} ms  "
                                 f"p99 {r['p99_ms']:7.2f} ms  "
                                 f"({r['streams_per_s']:.0f} streams/s)"
+                                f"{sp}"
                             )
 
     def _pick(mode, kind, clf="qat", devs=1):
@@ -391,6 +420,15 @@ def run(classifiers=("qat", "integer"), devices=None):
             claim["integer_vs_qat_scan"] = (
                 int_scan["ticks_per_s"] / fused_scan["ticks_per_s"]
             )
+        delta_scan = _pick("scan", "fv", "delta") or _pick(
+            "scan", "fv", "delta-int"
+        )
+        if delta_scan is not None:
+            claim["delta_scan_ticks_per_s"] = delta_scan["ticks_per_s"]
+            claim["delta_vs_qat_scan"] = (
+                delta_scan["ticks_per_s"] / fused_scan["ticks_per_s"]
+            )
+            claim["delta_sparsity"] = delta_scan["sparsity"]
     # stream-parallel scaling summary: sustained scan-fv throughput at
     # 256 streams per device count (vs the devices=1 row). On emulated
     # CPU meshes the "devices" share one physical socket, so the ratio
@@ -411,6 +449,9 @@ def run(classifiers=("qat", "integer"), devices=None):
         "backend": jax.default_backend(),
         "frontend": frontend,
         "classifiers": list(classifiers),
+        # ΔGRU threshold the delta rows ran at (per-row "theta" repeats
+        # it; dense rows carry theta=None and sparsity=1.0)
+        "theta": theta,
         # counts that actually produced rows (a requested count that
         # divides none of the 256+ stream sizes is swept nowhere and
         # must not be claimed in the artifact)
@@ -458,8 +499,9 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument(
         "--classifier", default="all",
-        choices=["all", "qat", "integer", "float"],
-        help="classifier backend(s) to sweep; 'all' = qat + integer",
+        choices=["all", "qat", "integer", "float", "delta", "delta-int"],
+        help="classifier backend(s) to sweep; "
+             "'all' = qat + integer + delta",
     )
     ap.add_argument(
         "--devices", default="auto",
@@ -467,12 +509,20 @@ if __name__ == "__main__":
              "every power-of-two count the platform exposes; emulate "
              "with XLA_FLAGS=--xla_force_host_platform_device_count=N)",
     )
+    ap.add_argument(
+        "--theta", type=float, default=0.25,
+        help="ΔGRU delta threshold (Q6.8 value units, applied to both "
+             "input and hidden deltas of every layer) for the "
+             "delta/delta-int rows; their 'sparsity' fields record the "
+             "measured effective-MAC fraction under this threshold",
+    )
     args = ap.parse_args()
     run(
-        ("qat", "integer") if args.classifier == "all"
+        ("qat", "integer", "delta") if args.classifier == "all"
         else (args.classifier,),
         devices=(
             None if args.devices == "auto"
             else [int(d) for d in args.devices.split(",")]
         ),
+        theta=args.theta,
     )

@@ -38,10 +38,20 @@ def main():
     ap.add_argument("--frontend", default="software",
                     choices=["software", "hardware", "hardware-pallas"])
     ap.add_argument("--classifier", default="qat",
-                    choices=["float", "qat", "integer"],
+                    choices=["float", "qat", "integer", "delta",
+                             "delta-int"],
                     help="classifier backend; 'integer' serves the "
                          "bit-exact int8/Q6.8 code engine (the IC's "
-                         "WMEM-resident arithmetic)")
+                         "WMEM-resident arithmetic); 'delta'/"
+                         "'delta-int' serve the temporal-sparsity ΔGRU "
+                         "engine at --theta (θ=0 is bit-identical to "
+                         "qat/integer) and report per-stream "
+                         "effective-MAC fractions")
+    ap.add_argument("--theta", type=float, default=0.0,
+                    help="ΔGRU delta threshold (Q6.8 value units, "
+                         "input and hidden deltas of every layer) for "
+                         "--classifier delta/delta-int; 0 = exact "
+                         "dense replay, larger skips more MACs")
     ap.add_argument("--offline", action="store_true",
                     help="replay buffered audio via the lax.scan driver "
                          "(server.run) instead of live per-tick step calls")
@@ -65,9 +75,15 @@ def main():
         mu=fv_log.reshape(-1, 16).mean(0),
         sigma=fv_log.reshape(-1, 16).std(0) + 1e-3,
     )
+    delta = None
+    if args.classifier in ("delta", "delta-int"):
+        from repro.core.gru_delta import DeltaConfig
+
+        delta = DeltaConfig(theta_x=args.theta, theta_h=args.theta)
     pipe = KWSPipeline(
         KWSPipelineConfig(
-            frontend=args.frontend, classifier=args.classifier
+            frontend=args.frontend, classifier=args.classifier,
+            delta=delta,
         ),
         norm_stats=stats,
     )
@@ -122,6 +138,19 @@ def main():
         top_counts[CLASSES[cls]] = top_counts.get(CLASSES[cls], 0) + 1
     print("final per-stream top classes (untrained weights -> arbitrary):",
           top_counts)
+    if args.classifier in ("delta", "delta-int"):
+        # per-stream effective-MAC fraction next to the posterior trace
+        # (the srv.sparsity telemetry the ΔGRU state accumulates)
+        frac = srv.sparsity
+        per_stream = {
+            sid: float(frac[srv.active[sid]]) for sid in sorted(detections)
+        }
+        shown = {s: round(f, 3) for s, f in list(per_stream.items())[:8]}
+        vals = list(per_stream.values())
+        print(f"ΔGRU θ={args.theta:g}: effective-MAC fraction "
+              f"mean {np.mean(vals):.3f} "
+              f"(min {np.min(vals):.3f} / max {np.max(vals):.3f}); "
+              f"first streams: {shown}")
     print("the IC serves 1 stream at 23 uW; TPU serving amortizes one "
           "weights-resident GRU across thousands of streams")
 

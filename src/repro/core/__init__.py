@@ -20,6 +20,7 @@ from repro.core.frontend import (
     register_frontend,
 )
 from repro.core.gru import GRUConfig, gru_classifier_forward, init_gru_classifier
+from repro.core.gru_delta import DeltaConfig
 from repro.core.gru_int import QuantizedClassifier
 from repro.core.pipeline import KWSPipeline, KWSPipelineConfig
 from repro.core.tdfex import TDFExConfig, TDFExState, tdfex_forward
@@ -44,6 +45,7 @@ __all__ = [
     "GRUConfig",
     "gru_classifier_forward",
     "init_gru_classifier",
+    "DeltaConfig",
     "QuantizedClassifier",
     "KWSPipeline",
     "KWSPipelineConfig",

@@ -20,6 +20,16 @@ selected via `KWSPipelineConfig.classifier`:
               sigmoid/tanh as Q6.8 LUTs. Bit-identical to "qat" on the
               same parameters (tests/test_classifier_int.py) while
               keeping weights WMEM-resident — the serving path.
+  "delta"   — the temporal-sparsity ΔGRU engine of
+              `repro.core.gru_delta` in the QAT float domain: per-layer
+              last-transmitted input/state memories + partial-sum
+              accumulators, thresholded deltas (θ per layer via
+              `KWSPipelineConfig.delta`, a `gru_delta.DeltaConfig`),
+              per-stream skipped/total MAC counters. θ=0 is
+              BIT-identical to "qat" (tests/test_gru_delta.py).
+  "delta-int" — the same ΔGRU engine layered on the "integer" codes
+              (int8 weights through `intgemm`, int32 Q6.8 state and
+              frac-15 accumulators). θ=0 is BIT-identical to "integer".
 
 The backend boundary speaks float FV_Norm frames in and float logits
 out for every backend, so softmax / smoothing / argmax downstream are
@@ -56,6 +66,8 @@ __all__ = [
     "FloatClassifier",
     "QATClassifier",
     "IntegerClassifier",
+    "DeltaClassifier",
+    "DeltaIntClassifier",
 ]
 
 
@@ -93,6 +105,15 @@ class ClassifierBackend:
 
     def prepare(self, params: Any, cfg: GRUConfig) -> Any:
         return params
+
+    def with_config(self, pipeline_config: Any) -> "ClassifierBackend":
+        """Hook for backends parameterized by pipeline-level config
+        beyond the `GRUConfig` (the ΔGRU thresholds live on
+        `KWSPipelineConfig.delta`). The registry hands out stateless
+        singletons; a backend that needs per-pipeline configuration
+        returns a configured copy here. Default: the singleton itself.
+        """
+        return self
 
     def init_states(
         self, cfg: GRUConfig, batch: int, device: Any = None
@@ -242,3 +263,97 @@ class IntegerClassifier(ClassifierBackend):
                 "call pipeline.prepare_params(params) (or "
                 "repro.serving.quantize.quantize_classifier) first"
             )
+
+
+# --------------------------------------------------------------------------
+# delta / delta-int — the temporal-sparsity ΔGRU engine
+# --------------------------------------------------------------------------
+
+class _DeltaBase(ClassifierBackend):
+    """Shared ΔGRU plumbing; subclasses pick the arithmetic domain.
+
+    Instances carry their `gru_delta.DeltaConfig` (the registry
+    singleton holds the θ=0 default); `with_config` returns a copy
+    bound to `KWSPipelineConfig.delta`. The per-layer state dicts
+    (memories, accumulators, skipped/total MAC counters) thread through
+    `init_states`, `ServerState` donation, `masked_select`, the jitted
+    slot reset, and the stream mesh exactly like the dense backends'
+    hidden-state leaves — the serving tick never special-cases them.
+    """
+
+    differentiable = False
+
+    def __init__(self, delta=None):
+        from repro.core.gru_delta import DeltaConfig
+
+        self.delta = DeltaConfig() if delta is None else delta
+
+    def with_config(self, pipeline_config):
+        delta = getattr(pipeline_config, "delta", None)
+        if delta is None or delta == self.delta:
+            return self
+        return type(self)(delta)
+
+    def _thetas(self, cfg: GRUConfig):
+        return self.delta.code_thresholds(cfg.num_layers)
+
+
+@register_classifier("delta")
+class DeltaClassifier(_DeltaBase):
+    """ΔGRU in the QAT fake-quant float domain (θ=0 ≡ "qat" bit for
+    bit). Params stay float (like "qat"); state leaves are float32
+    grid values plus int32 MAC counters."""
+
+    def init_states(self, cfg, batch, device=None):
+        from repro.core.gru_delta import delta_init_states
+
+        return delta_init_states(cfg, batch, device=device)
+
+    def forward(self, params, fv, cfg):
+        from repro.core.gru_delta import delta_classifier_forward
+
+        return delta_classifier_forward(params, fv, cfg, self._thetas(cfg))
+
+    def step(self, params, states, fv_t, cfg):
+        from repro.core.gru_delta import delta_classifier_step
+
+        return delta_classifier_step(
+            params, states, fv_t, cfg, self._thetas(cfg)
+        )
+
+
+@register_classifier("delta-int")
+class DeltaIntClassifier(_DeltaBase):
+    """ΔGRU on the "integer" backend's codes (θ=0 ≡ "integer" bit for
+    bit): int8 weight codes through `intgemm`, int32 Q6.8 state and
+    frac-15 accumulator codes, float FV_Norm/logits at the boundary
+    exactly like `IntegerClassifier`."""
+
+    def prepare(self, params, cfg):
+        return IntegerClassifier.prepare(self, params, cfg)
+
+    def init_states(self, cfg, batch, device=None):
+        from repro.core.gru_delta import int_delta_init_states
+
+        return int_delta_init_states(cfg, batch, device=device)
+
+    def forward(self, params, fv, cfg):
+        from repro.core import gru_int
+        from repro.core.gru_delta import int_delta_classifier_forward
+
+        IntegerClassifier._check_prepared(params)
+        codes = int_delta_classifier_forward(
+            params, gru_int.quantize_acts(fv), cfg, self._thetas(cfg)
+        )
+        return gru_int.dequantize_acts(codes)
+
+    def step(self, params, states, fv_t, cfg):
+        from repro.core import gru_int
+        from repro.core.gru_delta import int_delta_classifier_step
+
+        IntegerClassifier._check_prepared(params)
+        states, codes = int_delta_classifier_step(
+            params, states, gru_int.quantize_acts(fv_t), cfg,
+            self._thetas(cfg),
+        )
+        return states, gru_int.dequantize_acts(codes)

@@ -13,7 +13,11 @@ gives 12.4 ms, matching Table II — validated in tests/test_energy.py.
 
 Energy constants are calibrated once from the published power split and
 then reused to predict power for *other* network sizes (e.g. the 499 KB
-Cortex-M7 network of [36] discussed in Section IV).
+Cortex-M7 network of [36] discussed in Section IV) — and, via
+`AcceleratorModel.effective_mac_fraction`, for *other MAC loads*: the
+ΔGRU serving backend's measured temporal sparsity (`srv.sparsity`,
+`repro.core.gru_delta`) plugs in to predict DeltaKWS-style µW/latency
+at a given skip rate (benchmarks/fig_delta_tradeoff.py).
 """
 
 from __future__ import annotations
@@ -42,10 +46,28 @@ class AcceleratorModel:
     # 74 remaining cycles over ~10 sequenced ops ~= 7 cycles each.
     overhead_cycles_per_op: int = 7
     n_sequenced_ops: int = 10
+    # Fraction of the per-frame MACs actually executed (1.0 = dense).
+    # The ΔGRU serving backend (`repro.core.gru_delta`) measures this
+    # per stream as `srv.sparsity`; plugging the measured fraction in
+    # here predicts DeltaKWS-style gains: MAC cycles (and the dynamic
+    # MAC energy in `ICPowerModel`) scale linearly with the executed
+    # work, while the FSM overhead and the SRAM/logic leakage do not —
+    # exactly the split the DeltaKWS IC reports.
+    effective_mac_fraction: float = 1.0
+
+    def __post_init__(self):
+        if not 0.0 <= self.effective_mac_fraction <= 1.0:
+            raise ValueError(
+                "effective_mac_fraction must be in [0, 1]; got "
+                f"{self.effective_mac_fraction}"
+            )
+
+    def effective_macs(self, config: GRUConfig) -> int:
+        """Executed MACs per frame under the configured sparsity."""
+        return int(round(classifier_macs(config) * self.effective_mac_fraction))
 
     def cycles_per_frame(self, config: GRUConfig) -> int:
-        macs = classifier_macs(config)
-        mac_cycles = -(-macs // self.n_hpe)  # ceil
+        mac_cycles = -(-self.effective_macs(config) // self.n_hpe)  # ceil
         return mac_cycles + self.overhead_cycles_per_op * self.n_sequenced_ops
 
     def latency_s(self, config: GRUConfig) -> float:
@@ -81,8 +103,11 @@ class ICPowerModel:
     def accelerator_power_w(
         self, config: GRUConfig, frame_shift_s: float = 16e-3
     ) -> float:
-        macs = classifier_macs(config)
-        dyn = self.e_mac_j * macs / frame_shift_s
+        # dynamic energy scales with the MACs actually executed (the
+        # accelerator's effective_mac_fraction; 1.0 = dense); leakage is
+        # state-independent — the weights stay SRAM-resident whether or
+        # not a ΔGRU skips their columns this frame
+        dyn = self.e_mac_j * self.accel.effective_macs(config) / frame_shift_s
         sram_kb = (classifier_param_bytes(config) + 1.3 * 1024) / 1024.0
         leak = self.leak_sram_w_per_kb * sram_kb + self.leak_logic_w
         return dyn + leak

@@ -37,6 +37,7 @@ __all__ = [
     "init_gru_classifier",
     "gru_cell",
     "gru_layer",
+    "fc_logits",
     "gru_classifier_forward",
     "gru_classifier_step",
     "classifier_macs",
@@ -153,6 +154,21 @@ def gru_layer(
     return jnp.moveaxis(hs, 0, 1), h_t
 
 
+def fc_logits(params: Params, x: jnp.ndarray, config: GRUConfig):
+    """The dense FC head on the last axis: (..., H) -> (..., K).
+
+    The single definition shared by the batch forward, the streaming
+    step, and the ΔGRU float engine (`repro.core.gru_delta`) — the
+    θ=0 bit-identity target lives in exactly one place, mirroring how
+    the code domain shares `gru_int._accum`.
+    """
+    wspec = config.weight_spec if config.quantized else None
+    aspec = config.act_spec if config.quantized else None
+    bspec = None if wspec is None else quant.BIAS_Q8_15
+    w = _maybe_q(params["fc"]["w"], wspec)
+    return _maybe_q(x @ w + _maybe_q(params["fc"]["b"], bspec), aspec)
+
+
 def gru_classifier_forward(
     params: Params, fv: jnp.ndarray, config: GRUConfig
 ) -> jnp.ndarray:
@@ -165,12 +181,7 @@ def gru_classifier_forward(
     xs = fv
     for layer in params["gru"]:
         xs, _ = gru_layer(layer, xs, config)
-    wspec = config.weight_spec if config.quantized else None
-    aspec = config.act_spec if config.quantized else None
-    bspec = None if wspec is None else quant.BIAS_Q8_15
-    w = _maybe_q(params["fc"]["w"], wspec)
-    logits = xs @ w + _maybe_q(params["fc"]["b"], bspec)
-    return _maybe_q(logits, aspec)
+    return fc_logits(params, xs, config)
 
 
 def gru_classifier_step(
@@ -190,12 +201,7 @@ def gru_classifier_step(
         h_new = gru_cell(layer, h, x, config)
         new_states.append(h_new)
         x = h_new
-    wspec = config.weight_spec if config.quantized else None
-    aspec = config.act_spec if config.quantized else None
-    bspec = None if wspec is None else quant.BIAS_Q8_15
-    w = _maybe_q(params["fc"]["w"], wspec)
-    logits = _maybe_q(x @ w + _maybe_q(params["fc"]["b"], bspec), aspec)
-    return new_states, logits
+    return new_states, fc_logits(params, x, config)
 
 
 def init_states(

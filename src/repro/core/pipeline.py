@@ -7,11 +7,14 @@ Both stages are pluggable, string-keyed backends:
     "hardware-pallas" — see that module);
   * `KWSPipelineConfig.classifier` names a registered
     `repro.core.classifier.ClassifierBackend` ("float", "qat",
-    "integer") — None resolves from ``gru.quantized``. The "integer"
-    backend runs the bit-exact int8/Q6.8 engine of
-    `repro.core.gru_int`; `prepare_params` converts float training
-    params to its code pytree, and every classifier entry point below
-    accepts either form.
+    "integer", "delta", "delta-int") — None resolves from
+    ``gru.quantized``. The "integer" backend runs the bit-exact
+    int8/Q6.8 engine of `repro.core.gru_int`; `prepare_params`
+    converts float training params to its code pytree, and every
+    classifier entry point below accepts either form. The ΔGRU
+    backends ("delta"/"delta-int", `repro.core.gru_delta`) take their
+    thresholds from `KWSPipelineConfig.delta` (bound to the backend at
+    pipeline construction via `ClassifierBackend.with_config`).
 
 Every feature entry point routes through the frontend:
 
@@ -62,6 +65,7 @@ from repro.core.frontend import (
     get_frontend,
 )
 from repro.core.gru import GRUConfig, init_gru_classifier
+from repro.core.gru_delta import DeltaConfig
 from repro.core.tdfex import TDFExConfig, TDFExState
 
 __all__ = [
@@ -81,10 +85,15 @@ class KWSPipelineConfig:
     tdfex: Optional[TDFExConfig] = None
     use_log: bool = True
     use_norm: bool = True
-    # Registered ClassifierBackend key ("float" / "qat" / "integer");
-    # None resolves from gru.quantized ("qat" when True else "float"),
-    # preserving the pre-registry behavior.
+    # Registered ClassifierBackend key ("float" / "qat" / "integer" /
+    # "delta" / "delta-int"); None resolves from gru.quantized ("qat"
+    # when True else "float"), preserving the pre-registry behavior.
     classifier: Optional[str] = None
+    # ΔGRU thresholds for the "delta"/"delta-int" backends
+    # (`repro.core.gru_delta.DeltaConfig`; θ per layer). None -> θ=0,
+    # which is bit-identical to the dense base backend. Ignored by the
+    # dense backends.
+    delta: Optional["DeltaConfig"] = None
 
     def __post_init__(self):
         # The pipeline post-processes (and shapes chunks) with `fex`
@@ -123,9 +132,12 @@ class KWSPipeline:
     ):
         self.config = config
         self.frontend: FeatureFrontend = get_frontend(config.frontend)
+        # with_config binds pipeline-level backend parameters (the ΔGRU
+        # thresholds of config.delta); dense backends return the
+        # registry singleton unchanged.
         self.classifier: ClassifierBackend = get_classifier(
             config.classifier_key
-        )
+        ).with_config(config)
         if state is None:
             state = FrontendState()
         if norm_stats is not None:

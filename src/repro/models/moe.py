@@ -130,7 +130,7 @@ def moe_init(key, cfg, mesh_ctx: Optional[MeshContext] = None):
 def _expert_ffn(p_loc, xb: jnp.ndarray, act: str) -> jnp.ndarray:
     """xb (E_loc, C, d) -> (E_loc, C, d), batched over local experts.
     Weights may be int8-quantized {"q","s"} dicts (serving)."""
-    from repro.serving.quantize import dequant_weight
+    from repro.models.moe_quant import dequant_weight
 
     dt = xb.dtype
     up = jnp.einsum("ecd,edf->ecf", xb, dequant_weight(p_loc["w_up"], dt))
@@ -327,7 +327,7 @@ def moe_apply(
                 fsdp_idx = fsdp_idx * mc.mesh.shape[ax] + jax.lax.axis_index(ax)
 
             def ffn_stationary(buf):  # (E_loc, C, d) full-d dispatch buffer
-                from repro.serving.quantize import dequant_weight
+                from repro.models.moe_quant import dequant_weight
 
                 buf_sl = jax.lax.dynamic_slice_in_dim(
                     buf, fsdp_idx * d_shard, d_shard, axis=2

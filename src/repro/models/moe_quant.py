@@ -1,0 +1,89 @@
+"""Serving-time int8 quantization of MoE expert FFN banks (LM side).
+
+Expert banks are stored as int8 codes + one fp32 absmax scale per
+last-dim row and dequantized on the fly inside the expert matmuls
+(`repro.models.moe._expert_ffn`), halving decode-step HBM traffic. Used
+by the pjit'd LM serving programs of `repro.serving.serve_loop` when
+``arch_cfg.serve_quant`` is set.
+
+This lived in `repro.serving.quantize` until PR 5; that module is now
+the KWS classifier's quantizer only (`quantize_classifier` — the
+paper's WMEM image), and the MoE walker moved here next to its one
+consumer.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "dequant_weight",
+    "quantize_expert_params",
+    "quantize_expert_shapes",
+]
+
+_QUANT_NAMES = ("w_up", "w_gate", "w_down")
+
+
+def _quant_leaf(x: jnp.ndarray):
+    x32 = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(x32), axis=-1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x32 / scale), -127, 127).astype(jnp.int8)
+    return {"q": q, "s": scale.astype(jnp.float32)}
+
+
+def dequant_weight(w, dtype):
+    """Transparent accessor used by the expert matmuls."""
+    if isinstance(w, dict) and "q" in w:
+        return (w["q"].astype(jnp.float32) * w["s"]).astype(dtype)
+    return w.astype(dtype)
+
+
+def quantize_expert_params(params: Any) -> Any:
+    """Quantize MoE expert banks in a param tree (serving only)."""
+
+    def walk(node, under_moe=False):
+        if isinstance(node, dict):
+            out = {}
+            for k, v in node.items():
+                if under_moe and k in _QUANT_NAMES and not isinstance(v, dict):
+                    out[k] = _quant_leaf(v)
+                else:
+                    out[k] = walk(
+                        v, (under_moe or k == "moe") and k != "shared"
+                    )
+            return out
+        if isinstance(node, list):
+            return [walk(v, under_moe) for v in node]
+        return node
+
+    return walk(params)
+
+
+def quantize_expert_shapes(params_shape: Any) -> Any:
+    """Abstract (ShapeDtypeStruct) version for dry-run lowering."""
+
+    def walk(node, under_moe=False):
+        if isinstance(node, dict):
+            out = {}
+            for k, v in node.items():
+                if under_moe and k in _QUANT_NAMES and not isinstance(v, dict):
+                    out[k] = {
+                        "q": jax.ShapeDtypeStruct(v.shape, jnp.int8),
+                        "s": jax.ShapeDtypeStruct(
+                            v.shape[:-1] + (1,), jnp.float32
+                        ),
+                    }
+                else:
+                    out[k] = walk(
+                        v, (under_moe or k == "moe") and k != "shared"
+                    )
+            return out
+        if isinstance(node, list):
+            return [walk(v, under_moe) for v in node]
+        return node
+
+    return walk(params_shape)

@@ -1,31 +1,24 @@
-"""Serving-side parameter quantization.
+"""Serving-side KWS classifier quantization (the paper's WMEM image).
 
-Two independent consumers share this module:
+`quantize_classifier` converts the float/QAT GRU-FC parameters of
+`repro.core.gru` into a `repro.core.gru_int.QuantizedClassifier`:
+int8 weight codes, frac-15 accumulator-resident bias codes — the
+~24 KB WMEM image the IC actually stores (Sections II, III-E).
+The integer engine evaluated on these codes is bit-identical to
+the QAT fake-quant forward (tests/test_classifier_int.py); the
+conversion uses the same round-to-nearest-even the QAT fake-quant
+applies, so quantize -> dequantize lands exactly on the values the
+QAT forward already sees. The ΔGRU code-domain backend ("delta-int",
+`repro.core.gru_delta`) consumes the same codes.
 
-  1. **KWS classifier (the paper's datapath, primary).**
-     `quantize_classifier` converts the float/QAT GRU-FC parameters of
-     `repro.core.gru` into a `repro.core.gru_int.QuantizedClassifier`:
-     int8 weight codes, frac-15 accumulator-resident bias codes — the
-     ~24 KB WMEM image the IC actually stores (Sections II, III-E).
-     The integer engine evaluated on these codes is bit-identical to
-     the QAT fake-quant forward (tests/test_classifier_int.py); the
-     conversion uses the same round-to-nearest-even the QAT fake-quant
-     applies, so quantize -> dequantize lands exactly on the values the
-     QAT forward already sees.
-
-  2. **LM expert banks (legacy, from the framework-scale LM side).**
-     `quantize_expert_params` / `quantize_expert_shapes` store MoE
-     expert FFN banks as int8 codes + one fp32 absmax scale per
-     last-dim row, dequantized on the fly inside the expert matmuls to
-     halve decode-step HBM traffic. Used by the pjit'd LM serving
-     programs of `repro.serving.serve_loop` (`serve_quant`).
+(The LM-side MoE expert-bank quantizer that used to share this module
+now lives with its consumer: `repro.models.moe_quant`.)
 """
 
 from __future__ import annotations
 
 from typing import Any
 
-import jax
 import jax.numpy as jnp
 
 from repro.core import quant
@@ -34,15 +27,8 @@ from repro.core.gru_int import QuantizedClassifier
 
 __all__ = [
     "quantize_classifier",
-    "dequant_weight",
-    "quantize_expert_params",
-    "quantize_expert_shapes",
 ]
 
-
-# --------------------------------------------------------------------------
-# KWS classifier -> integer codes (the paper's WMEM image)
-# --------------------------------------------------------------------------
 
 def _w_codes(w: jnp.ndarray) -> jnp.ndarray:
     """Float weights -> int8 codes on the paper's fixed frac-7 grid.
@@ -92,71 +78,3 @@ def quantize_classifier(params: Any, config: GRUConfig) -> QuantizedClassifier:
         fc_w=_w_codes(params["fc"]["w"]),
         fc_b=_b_codes(params["fc"]["b"]),
     )
-
-
-# --------------------------------------------------------------------------
-# LM MoE expert banks -> int8 + absmax row scales (legacy LM serving)
-# --------------------------------------------------------------------------
-
-_QUANT_NAMES = ("w_up", "w_gate", "w_down")
-
-
-def _quant_leaf(x: jnp.ndarray):
-    x32 = x.astype(jnp.float32)
-    scale = jnp.max(jnp.abs(x32), axis=-1, keepdims=True) / 127.0 + 1e-12
-    q = jnp.clip(jnp.round(x32 / scale), -127, 127).astype(jnp.int8)
-    return {"q": q, "s": scale.astype(jnp.float32)}
-
-
-def dequant_weight(w, dtype):
-    """Transparent accessor used by the expert matmuls."""
-    if isinstance(w, dict) and "q" in w:
-        return (w["q"].astype(jnp.float32) * w["s"]).astype(dtype)
-    return w.astype(dtype)
-
-
-def quantize_expert_params(params: Any) -> Any:
-    """Quantize MoE expert banks in a param tree (serving only)."""
-
-    def walk(node, under_moe=False):
-        if isinstance(node, dict):
-            out = {}
-            for k, v in node.items():
-                if under_moe and k in _QUANT_NAMES and not isinstance(v, dict):
-                    out[k] = _quant_leaf(v)
-                else:
-                    out[k] = walk(
-                        v, (under_moe or k == "moe") and k != "shared"
-                    )
-            return out
-        if isinstance(node, list):
-            return [walk(v, under_moe) for v in node]
-        return node
-
-    return walk(params)
-
-
-def quantize_expert_shapes(params_shape: Any) -> Any:
-    """Abstract (ShapeDtypeStruct) version for dry-run lowering."""
-
-    def walk(node, under_moe=False):
-        if isinstance(node, dict):
-            out = {}
-            for k, v in node.items():
-                if under_moe and k in _QUANT_NAMES and not isinstance(v, dict):
-                    out[k] = {
-                        "q": jax.ShapeDtypeStruct(v.shape, jnp.int8),
-                        "s": jax.ShapeDtypeStruct(
-                            v.shape[:-1] + (1,), jnp.float32
-                        ),
-                    }
-                else:
-                    out[k] = walk(
-                        v, (under_moe or k == "moe") and k != "shared"
-                    )
-            return out
-        if isinstance(node, list):
-            return [walk(v, under_moe) for v in node]
-        return node
-
-    return walk(params_shape)

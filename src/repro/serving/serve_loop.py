@@ -13,10 +13,15 @@ fs_audio); raw audio is pushed through the pipeline's registered
 `FeatureFrontend` (software / hardware-sim / Pallas TDC) with per-stream
 filter + SRO-phase carry, so the server is end-to-end audio-in,
 posteriors-out. The GRU step itself runs through the pipeline's
-registered `ClassifierBackend` (float / qat / integer): with
-``classifier="integer"`` the tick consumes int8 weight codes and
-int32 Q6.8 hidden-state codes — the IC's WMEM-resident arithmetic,
-bit-identical to the QAT path. This is the serve-side example driver
+registered `ClassifierBackend` (float / qat / integer / delta /
+delta-int): with ``classifier="integer"`` the tick consumes int8
+weight codes and int32 Q6.8 hidden-state codes — the IC's
+WMEM-resident arithmetic, bit-identical to the QAT path; with the
+ΔGRU backends ("delta"/"delta-int", `repro.core.gru_delta`) each
+slot's state additionally carries last-transmitted memories, partial-
+sum accumulators, and skipped/total MAC counters, and the server
+exposes the measured temporal sparsity as `srv.sparsity` (per-stream
+effective-MAC fraction). This is the serve-side example driver
 (examples/serve_streaming.py).
 
 The whole per-tick device program is ONE fused jit (`_fused_tick`):
@@ -113,7 +118,7 @@ def lower_decode_step(arch_cfg, rules: ShardingRules, shape_spec):
         jax.random.PRNGKey(0),
     )
     if getattr(arch_cfg, "serve_quant", False):
-        from repro.serving.quantize import quantize_expert_shapes
+        from repro.models.moe_quant import quantize_expert_shapes
 
         params_shape = quantize_expert_shapes(params_shape)
     cache_shape = jax.eval_shape(
@@ -195,10 +200,14 @@ def lower_prefill(arch_cfg, rules: ShardingRules, shape_spec):
 class ServerState:
     """All per-slot device state of a `StreamingKWSServer`, as one pytree.
 
-    gru    — per-layer GRU hidden states, each (max_streams, H):
-             float32 for the float/qat classifier backends, int32 Q6.8
-             codes for "integer" (the backend owns the representation;
-             masking, donation, and slot resets are dtype-agnostic).
+    gru    — per-layer classifier state, owned by the backend: a
+             (max_streams, H) float32 hidden state per layer for
+             float/qat, int32 Q6.8 codes for "integer", and for the
+             ΔGRU backends a per-layer dict {h, x_ref, h_ref, acc_x,
+             acc_h, skipped, total} of (max_streams, ...) leaves
+             (masking, donation, slot resets, and the stream mesh are
+             structure- and dtype-agnostic; all-zeros is every
+             backend's valid fresh state).
     carry  — frontend streaming carry (filter / SRO-phase state), a dict
              of (max_streams, ...) arrays from `streaming_features_init`.
     scores — exponentially smoothed posteriors, (max_streams, K).
@@ -430,6 +439,41 @@ class StreamingKWSServer:
         (see `step_batch`). The authoritative copy lives in
         `self.state.scores`."""
         return np.array(self.state.scores)
+
+    @property
+    def sparsity(self) -> np.ndarray:
+        """Per-slot effective-MAC fraction, (max_streams,) float32.
+
+        For the ΔGRU backends ("delta"/"delta-int") this reads the
+        skipped/total MAC counters the tick accumulates per stream
+        (executed / offered over the whole classifier, always-dense FC
+        included — see `repro.core.gru_delta.effective_mac_fraction`):
+        1.0 means fully dense, 0.1 means the stream's traffic let the
+        engine skip 90 % of the eligible work. Counters reset with the
+        slot on `open_stream`, advance only under the submitted mask
+        (an idle tick changes nothing), and ride `ServerState` through
+        donation and the stream mesh like every other leaf, so the
+        telemetry is exact for live ticks, slab ingress, and the
+        scanned replay alike. Dense backends report all-ones — the
+        fraction is an invariant 1.0 there, so callers can sweep
+        backends without special-casing.
+
+        An owned host copy, like `scores` (never a view of a
+        donation-bound buffer).
+        """
+        from repro.core.gru_delta import (
+            effective_mac_fraction,
+            is_delta_states,
+        )
+
+        if is_delta_states(self.state.gru):
+            return np.array(
+                effective_mac_fraction(
+                    list(self.state.gru), self.pipeline.config.gru
+                ),
+                dtype=np.float32,
+            )
+        return np.ones((self.max_streams,), np.float32)
 
     # ---- slot lifecycle ----
 

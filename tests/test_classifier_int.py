@@ -63,7 +63,9 @@ def _grid_fv(shape, seed=0, scale=4.0):
 # --------------------------------------------------------------------------
 
 def test_registry_contents():
-    assert available_classifiers() == ("float", "integer", "qat")
+    assert available_classifiers() == (
+        "delta", "delta-int", "float", "integer", "qat"
+    )
     for name in available_classifiers():
         assert get_classifier(name).name == name
 

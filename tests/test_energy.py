@@ -1,7 +1,18 @@
-"""Energy/latency model vs the paper's published numbers (Table II)."""
+"""Energy/latency model vs the paper's published numbers (Table II),
+plus the ΔGRU effective-MAC knob (dense fraction=1.0 stays pinned to
+the paper; fractions < 1 scale MAC cycles and dynamic power only)."""
 
-from repro.core.energy import paper_accelerator, paper_power_model
-from repro.core.gru import GRUConfig
+import dataclasses
+
+import pytest
+
+from repro.core.energy import (
+    AcceleratorModel,
+    ICPowerModel,
+    paper_accelerator,
+    paper_power_model,
+)
+from repro.core.gru import GRUConfig, classifier_macs
 
 
 def test_latency_matches_table2():
@@ -25,6 +36,53 @@ def test_total_power_matches():
     pm = paper_power_model()
     total = pm.total_power_w(GRUConfig()) * 1e6
     assert abs(total - 23.0) < 0.2  # paper: 23 uW
+
+
+def test_dense_fraction_pins_paper_numbers():
+    """effective_mac_fraction=1.0 (explicitly constructed) must leave
+    the calibrated Table II numbers untouched: 12.4 ms latency and
+    9.96 uW accelerator power."""
+    acc = AcceleratorModel(effective_mac_fraction=1.0)
+    assert acc.effective_macs(GRUConfig()) == classifier_macs(GRUConfig())
+    assert abs(acc.latency_s(GRUConfig()) * 1e3 - 12.4) < 0.1
+    pm = ICPowerModel(accel=acc)
+    assert abs(pm.accelerator_power_w(GRUConfig()) * 1e6 - 9.96) < 0.15
+    assert abs(pm.total_power_w(GRUConfig()) * 1e6 - 23.0) < 0.2
+
+
+def test_effective_mac_fraction_scales_cycles_and_dynamic_power():
+    """A 2x MAC reduction (fraction 0.5): MAC cycles halve (FSM
+    overhead does not), and exactly the dynamic MAC energy halves
+    (leakage untouched) — the DeltaKWS power split."""
+    cfg = GRUConfig()
+    dense = paper_accelerator()
+    sparse = AcceleratorModel(effective_mac_fraction=0.5)
+    overhead = dense.overhead_cycles_per_op * dense.n_sequenced_ops
+    dense_mac_cycles = dense.cycles_per_frame(cfg) - overhead
+    sparse_mac_cycles = sparse.cycles_per_frame(cfg) - overhead
+    assert sparse_mac_cycles == -(-(classifier_macs(cfg) // 2) // dense.n_hpe)
+    assert sparse_mac_cycles < 0.51 * dense_mac_cycles
+    assert sparse.latency_s(cfg) < dense.latency_s(cfg)
+
+    pm_dense = paper_power_model()
+    pm_sparse = ICPowerModel(accel=sparse)
+    frame = 16e-3
+    dyn_dense = pm_dense.e_mac_j * classifier_macs(cfg) / frame
+    leak = pm_dense.accelerator_power_w(cfg) - dyn_dense
+    expect = leak + dyn_dense / 2
+    assert abs(pm_sparse.accelerator_power_w(cfg) - expect) < 1e-9
+    # total power drops by the same delta (FEx/digital-frontend fixed)
+    assert (
+        pm_dense.total_power_w(cfg) - pm_sparse.total_power_w(cfg)
+        == pytest.approx(dyn_dense / 2, rel=1e-6)
+    )
+
+
+def test_effective_mac_fraction_validated():
+    with pytest.raises(ValueError, match="effective_mac_fraction"):
+        AcceleratorModel(effective_mac_fraction=1.5)
+    with pytest.raises(ValueError, match="effective_mac_fraction"):
+        dataclasses.replace(paper_accelerator(), effective_mac_fraction=-0.1)
 
 
 def test_model_extrapolates_bigger_network():

@@ -101,7 +101,7 @@ def test_moe_grads_flow_to_experts_and_router():
 
 def test_int8_expert_serving_weights():
     """serve_quant path: ~1% output error, exact structural roundtrip."""
-    from repro.serving.quantize import (
+    from repro.models.moe_quant import (
         quantize_expert_params, quantize_expert_shapes)
 
     cfg = _tiny_cfg()

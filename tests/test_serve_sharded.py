@@ -6,9 +6,13 @@ runs on any plain CPU runner. It proves the stream-parallel
 `StreamingKWSServer` (slot axis sharded over a 1-D ``("stream",)``
 mesh) is BIT-identical — `np.testing.assert_array_equal`, never
 allclose — to the single-device server for every classifier backend
-("float" / "qat" / "integer"), across live ticks (`step` /
-`step_batch`), the scanned replay (`run_batch`), idle-stream isolation,
-and slot-reuse hygiene across shard boundaries. A hypothesis property
+("float" / "qat" / "integer" / "delta" / "delta-int"), across live
+ticks (`step` / `step_batch`), the scanned replay (`run_batch`),
+idle-stream isolation, and slot-reuse hygiene across shard boundaries.
+The ΔGRU backends additionally get a cross-backend check: a θ=0 delta
+server sharded over the mesh must bit-match its dense base backend's
+single-device server (the temporal-sparsity engine survives
+partitioning), with the sparsity telemetry consistent across shards. A hypothesis property
 test drives random open/close/submit schedules against a pure-Python
 lifecycle oracle: a stream's scores depend only on its own submitted
 frames, never on other streams' traffic or its device placement. The
@@ -44,7 +48,7 @@ MAX_STREAMS = 16
 # degrades to a smaller mesh instead of erroring the whole suite
 MESH_DEV = max(d for d in (2, 4, 8) if d <= min(8, N_DEV)) if N_DEV >= 2 else 1
 
-CLASSIFIERS = ("float", "qat", "integer")
+CLASSIFIERS = ("float", "qat", "integer", "delta", "delta-int")
 
 
 @pytest.fixture(scope="module")
@@ -350,6 +354,103 @@ def test_step_twice_keeps_first_scores_sharded(server_pair):
     np.testing.assert_array_equal(s1, snap_s)
     np.testing.assert_array_equal(t1, snap_t)
     np.testing.assert_array_equal(view, snap_s)
+
+
+# --------------------------------------------------------------------------
+# ΔGRU: θ=0 sharded delta server == single-device dense base server
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize(
+    "delta_key,base_key", [("delta", "qat"), ("delta-int", "integer")]
+)
+def test_sharded_delta_matches_dense_base(norm_stats, delta_key, base_key):
+    """Cross-backend AND cross-placement: the θ=0 ΔGRU server sharded
+    over the emulated mesh bit-matches the dense base backend's
+    single-device server — scores, argmax, and the hidden-state
+    trajectory — for live slab ticks and the scanned replay. The
+    per-stream sparsity telemetry survives partitioning (counters are
+    just more sharded state leaves)."""
+    pipe_delta = KWSPipeline(
+        KWSPipelineConfig(classifier=delta_key), norm_stats=norm_stats
+    )
+    pipe_base = KWSPipeline(
+        KWSPipelineConfig(classifier=base_key), norm_stats=norm_stats
+    )
+    params = pipe_base.init_params(jax.random.PRNGKey(13))
+    dense = StreamingKWSServer(pipe_base, params, max_streams=MAX_STREAMS)
+    sharded = StreamingKWSServer(
+        pipe_delta, params, max_streams=MAX_STREAMS, devices=MESH_DEV
+    )
+    for srv in (dense, sharded):
+        for sid in range(MAX_STREAMS):
+            srv.open_stream(sid)
+    hop = pipe_base.chunk_samples
+    rng = np.random.default_rng(14)
+    for t in range(3):
+        slab = rng.standard_normal((MAX_STREAMS, hop)).astype(np.float32)
+        slab *= 0.05
+        mask = np.ones(MAX_STREAMS, bool)
+        mask[t::3] = False
+        s_a, t_a = dense.step_batch(slab, mask)
+        s_b, t_b = sharded.step_batch(slab, mask)
+        np.testing.assert_array_equal(s_a, s_b)
+        np.testing.assert_array_equal(t_a, t_b)
+    slab = rng.standard_normal((4, MAX_STREAMS, hop)).astype(np.float32)
+    slab *= 0.05
+    mask = rng.random((4, MAX_STREAMS)) < 0.7
+    seq_a, tops_a = dense.run_batch(slab, mask)
+    seq_b, tops_b = sharded.run_batch(slab, mask)
+    np.testing.assert_array_equal(seq_a, seq_b)
+    np.testing.assert_array_equal(tops_a, tops_b)
+    # the delta server's true hidden state tracks the dense server's
+    for hb, std in zip(dense.state.gru, sharded.state.gru):
+        np.testing.assert_array_equal(
+            np.asarray(hb), np.asarray(std["h"])
+        )
+    # telemetry: dense base reports all-ones, the sharded delta server
+    # a valid fraction per slot (θ=0 still skips exactly-repeated
+    # components), gathered transparently from the sharded counters
+    np.testing.assert_array_equal(
+        dense.sparsity, np.ones(MAX_STREAMS, np.float32)
+    )
+    frac = sharded.sparsity
+    assert frac.shape == (MAX_STREAMS,)
+    assert ((frac >= 0.0) & (frac <= 1.0)).all()
+
+
+def test_sharded_delta_sparsity_matches_single_device(norm_stats):
+    """The measured per-stream effective-MAC fraction is placement-
+    independent: a θ>0 sharded delta server reports bit-identical
+    sparsity to its single-device twin on the same traffic."""
+    from repro.core.gru_delta import DeltaConfig
+
+    pipe = KWSPipeline(
+        KWSPipelineConfig(
+            classifier="delta",
+            delta=DeltaConfig(theta_x=0.25, theta_h=0.25),
+        ),
+        norm_stats=norm_stats,
+    )
+    params = pipe.init_params(jax.random.PRNGKey(15))
+    single = StreamingKWSServer(pipe, params, max_streams=MAX_STREAMS)
+    sharded = StreamingKWSServer(
+        pipe, params, max_streams=MAX_STREAMS, devices=MESH_DEV
+    )
+    for srv in (single, sharded):
+        for sid in range(MAX_STREAMS):
+            srv.open_stream(sid)
+    hop = pipe.chunk_samples
+    rng = np.random.default_rng(16)
+    base = rng.standard_normal((MAX_STREAMS, hop)).astype(np.float32) * 0.05
+    for t in range(4):
+        slab = base + rng.standard_normal(
+            (MAX_STREAMS, hop)
+        ).astype(np.float32) * 0.002
+        mask = np.ones(MAX_STREAMS, bool)
+        single.step_batch(slab, mask)
+        sharded.step_batch(slab, mask)
+    np.testing.assert_array_equal(single.sparsity, sharded.sparsity)
+    assert (sharded.sparsity < 1.0).all()  # near-static traffic skips
 
 
 # --------------------------------------------------------------------------
