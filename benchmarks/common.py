@@ -178,6 +178,12 @@ def percentile_stats(latencies_s) -> Dict[str, float]:
       classifiers    registered ClassifierBackend keys the sweep covered
       theta          ΔGRU threshold (Q6.8 value units) the delta rows
                      ran at (--theta; dense rows are unaffected)
+      cascade        True when the sweep served every non-legacy point
+                     with the stage-1 wake gate
+                     (`repro.serving.cascade`; --cascade)
+      wake_threshold energy-detector wake threshold the cascaded sweep
+                     ran at (--wake-threshold; None when cascade is
+                     False)
       devices        device counts the sweep covered (counts > 1 bench
                      the stream-parallel server on a ("stream",) mesh)
       quick          True when the quick (CI-sized) sweep ran
@@ -217,6 +223,15 @@ def percentile_stats(latencies_s) -> Dict[str, float]:
                        (predates the telemetry)
         theta          ΔGRU threshold of the point's pipeline (None for
                        dense backends)
+        wake_rate      measured classifier duty cycle, mean over the
+                       point's active streams (the `srv.wake_rate`
+                       telemetry): < 1.0 when the stage-1 cascade gate
+                       held the classifier asleep for part of the
+                       traffic, identically 1.0 for ungated sweeps,
+                       None for the legacy path (predates the
+                       telemetry)
+        wake_threshold stage-1 wake threshold of the point's pipeline
+                       (None when the sweep ran without --cascade)
         p50_ms/p99_ms  per-tick wall latency percentiles
         mean_ms        mean per-tick wall latency
       scaling[]      per device count: sustained scan-fv ticks/sec at

@@ -36,6 +36,18 @@ delta engine), so the headline claim is unchanged; the other backends'
 rows quantify the cost/benefit of code-domain and sparsity-aware
 serving.
 
+Cascade (``--cascade``, plus ``--wake-threshold``): serves every
+non-legacy point with the stage-1 wake gate
+(`repro.serving.cascade`, energy detector) in the tick; each row then
+records the measured mean classifier duty cycle (``wake_rate``, the
+`srv.wake_rate` telemetry over the point's active streams — the load
+generator's noise traffic mostly sits below a real threshold, so the
+gate holds the classifier asleep and the row measures the gated
+tick's throughput). Cascaded sweeps skip the headline claim: the
+legacy baseline has no gate, so fused-vs-legacy is not
+apples-to-apples there — the default (no ``--cascade``) sweep keeps
+the claim unchanged.
+
 Devices (``--devices``, default "auto"): every row records the device
 count it ran on. Counts > 1 build the server on a ``("stream",)`` mesh
 (the slot axis sharded block-wise, params replicated — bit-identical to
@@ -60,6 +72,7 @@ compute per tick on CPU).
 
   PYTHONPATH=src python -m benchmarks.serve_load [--classifier all]
       [--devices auto|1|1,2,...] [--theta 0.25]
+      [--cascade [--wake-threshold 0.15]]
 """
 
 from __future__ import annotations
@@ -77,6 +90,7 @@ from repro.core import quant
 from repro.core.fex import fit_norm_stats
 from repro.core.gru_delta import DeltaConfig
 from repro.core.pipeline import KWSPipeline, KWSPipelineConfig
+from repro.serving.cascade import CascadeConfig
 from repro.serving.serve_loop import StreamingKWSServer
 
 N_TICKS = 40 if QUICK else 200
@@ -160,7 +174,7 @@ class _LegacyStreamingServer:
         return out
 
 
-def _pipeline(classifier=None, theta=0.0):
+def _pipeline(classifier=None, theta=0.0, cascade=None):
     rng = np.random.default_rng(0)
     audio = jnp.asarray(
         rng.standard_normal((4, 16000)).astype(np.float32) * 0.05
@@ -174,7 +188,9 @@ def _pipeline(classifier=None, theta=0.0):
         else None
     )
     return KWSPipeline(
-        KWSPipelineConfig(classifier=classifier, delta=delta),
+        KWSPipelineConfig(
+            classifier=classifier, delta=delta, cascade=cascade
+        ),
         norm_stats=stats,
     )
 
@@ -265,10 +281,16 @@ def _bench_mode(mode, kind, pipe, params, max_streams, occupancy, n_ticks,
     # telemetry; identically 1.0 for the dense backends, None for the
     # pre-telemetry legacy path)
     sparsity = None
+    wake = None
     if isinstance(srv, StreamingKWSServer):
         slots = list(srv.active.values())
         sparsity = float(np.mean(srv.sparsity[slots]))
+        # measured classifier duty cycle under the stage-1 gate (mean
+        # srv.wake_rate over active streams; identically 1.0 when no
+        # cascade is configured, None for the pre-telemetry legacy path)
+        wake = float(np.mean(srv.wake_rate[slots]))
     delta_cfg = pipe.config.delta
+    casc_cfg = pipe.config.cascade
     return {
         "classifier": pipe.config.classifier_key,
         "mode": mode,
@@ -282,6 +304,10 @@ def _bench_mode(mode, kind, pipe, params, max_streams, occupancy, n_ticks,
         "streams_per_s": ticks_per_s * n_active,
         "sparsity": sparsity,
         "theta": None if delta_cfg is None else delta_cfg.theta_x,
+        "wake_rate": wake,
+        "wake_threshold": (
+            None if casc_cfg is None else casc_cfg.wake_threshold
+        ),
         **stats,
     }
 
@@ -297,7 +323,11 @@ def _auto_devices():
     return counts
 
 
-def run(classifiers=("qat", "integer", "delta"), devices=None, theta=0.25):
+def run(classifiers=("qat", "integer", "delta"), devices=None, theta=0.25,
+        cascade=False, wake_threshold=0.15):
+    casc = (
+        CascadeConfig(wake_threshold=wake_threshold) if cascade else None
+    )
     if devices is None:
         devices = _auto_devices()
     sweep_streams = [64, 256] if QUICK else [64, 256, 1024]
@@ -327,14 +357,18 @@ def run(classifiers=("qat", "integer", "delta"), devices=None, theta=0.25):
     results = []
     frontend = None
     for clf in classifiers:
-        pipe = _pipeline(clf, theta=theta)
+        pipe = _pipeline(clf, theta=theta, cascade=casc)
         frontend = pipe.config.frontend
         params = pipe.init_params(jax.random.PRNGKey(0))
         for kind in ("fv", "audio"):
             # the legacy baseline predates the classifier registry;
-            # bench it only on the backend it historically ran (qat)
+            # bench it only on the backend it historically ran (qat) —
+            # and never under the cascade (it has no gate, so a gated
+            # sweep drops it rather than bench an unlike-for-unlike
+            # pair)
             modes = (
-                ("fused", "scan", "legacy") if clf == "qat"
+                ("fused", "scan", "legacy")
+                if clf == "qat" and casc is None
                 else ("fused", "scan")
             )
             for ms in sweep_streams:
@@ -362,6 +396,8 @@ def run(classifiers=("qat", "integer", "delta"), devices=None, theta=0.25):
                                 f"  eff-MAC {r['sparsity']:.3f}"
                                 if r["theta"] is not None else ""
                             )
+                            if r["wake_threshold"] is not None:
+                                sp += f"  wake {r['wake_rate']:.3f}"
                             print(
                                 f"  {clf:9s} {kind:5s} {mode:6s} "
                                 f"N={ms:5d} occ={occ:.1f} dev={d}: "
@@ -388,9 +424,10 @@ def run(classifiers=("qat", "integer", "delta"), devices=None, theta=0.25):
     # per-stream path on the same traffic. The live per-call fused tick
     # is reported separately as speedup_live, not folded into the claim.
     # The claim gates on the qat backend; a sweep restricted to another
-    # backend (--classifier integer) records results without a claim.
+    # backend (--classifier integer) or run under --cascade (no legacy
+    # rows to compare against) records results without a claim.
     claim = None
-    if "qat" in classifiers:
+    if "qat" in classifiers and casc is None:
         fused_live = _pick("fused", "fv")
         fused_scan = _pick("scan", "fv")
         legacy = _pick("legacy", "fv")
@@ -452,6 +489,11 @@ def run(classifiers=("qat", "integer", "delta"), devices=None, theta=0.25):
         # ΔGRU threshold the delta rows ran at (per-row "theta" repeats
         # it; dense rows carry theta=None and sparsity=1.0)
         "theta": theta,
+        # stage-1 cascade the sweep served under (per-row
+        # "wake_threshold"/"wake_rate" repeat/record it; False -> every
+        # row ran the ungated tick and wake_rate is identically 1.0)
+        "cascade": cascade,
+        "wake_threshold": wake_threshold if cascade else None,
         # counts that actually produced rows (a requested count that
         # divides none of the 256+ stream sizes is swept nowhere and
         # must not be claimed in the artifact)
@@ -488,9 +530,13 @@ def run(classifiers=("qat", "integer", "delta"), devices=None, theta=0.25):
             f"(BENCH_serve.json written)"
         )
     else:
+        why = (
+            "cascaded sweep has no like-for-like legacy baseline"
+            if cascade else "no qat baseline in sweep"
+        )
         print(
-            f"serve_load: swept classifiers {list(classifiers)} (no qat "
-            f"baseline in sweep -> no claim); BENCH_serve.json written"
+            f"serve_load: swept classifiers {list(classifiers)} "
+            f"({why} -> no claim); BENCH_serve.json written"
         )
     return claim
 
@@ -510,6 +556,20 @@ if __name__ == "__main__":
              "with XLA_FLAGS=--xla_force_host_platform_device_count=N)",
     )
     ap.add_argument(
+        "--cascade", action="store_true",
+        help="serve every non-legacy point with the stage-1 wake gate "
+             "(repro.serving.cascade, energy detector at "
+             "--wake-threshold); rows record the measured classifier "
+             "duty cycle as 'wake_rate'; the fused-vs-legacy claim is "
+             "skipped (the legacy path has no gate)",
+    )
+    ap.add_argument(
+        "--wake-threshold", type=float, default=0.15,
+        help="stage-1 energy-detector wake threshold for --cascade "
+             "(mean rectified FV_Norm units; 0 = always-open, "
+             "bit-identical to the ungated tick)",
+    )
+    ap.add_argument(
         "--theta", type=float, default=0.25,
         help="ΔGRU delta threshold (Q6.8 value units, applied to both "
              "input and hidden deltas of every layer) for the "
@@ -525,4 +585,6 @@ if __name__ == "__main__":
             else [int(d) for d in args.devices.split(",")]
         ),
         theta=args.theta,
+        cascade=args.cascade,
+        wake_threshold=args.wake_threshold,
     )

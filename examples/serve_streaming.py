@@ -11,7 +11,8 @@ replays each stream's full buffered audio through the server's
 `lax.scan` driver instead of live per-tick calls.
 
   PYTHONPATH=src python examples/serve_streaming.py [--streams 32]
-      [--frontend software] [--classifier qat|integer] [--offline]
+      [--frontend software] [--classifier qat|integer]
+      [--cascade [--wake-threshold 0.1]] [--offline]
 """
 
 import argparse
@@ -52,6 +53,17 @@ def main():
                          "input and hidden deltas of every layer) for "
                          "--classifier delta/delta-int; 0 = exact "
                          "dense replay, larger skips more MACs")
+    ap.add_argument("--cascade", action="store_true",
+                    help="run the stage-1 always-on wake gate "
+                         "(repro.serving.cascade, energy detector) "
+                         "inside the tick: the classifier advances "
+                         "only on ticks the gate wakes, and the "
+                         "per-stream duty cycle (srv.wake_rate) is "
+                         "printed next to the posterior trace")
+    ap.add_argument("--wake-threshold", type=float, default=0.1,
+                    help="energy-detector wake threshold for --cascade "
+                         "(mean rectified FV_Norm units; 0 = "
+                         "always-open, bit-identical to no cascade)")
     ap.add_argument("--offline", action="store_true",
                     help="replay buffered audio via the lax.scan driver "
                          "(server.run) instead of live per-tick step calls")
@@ -80,10 +92,15 @@ def main():
         from repro.core.gru_delta import DeltaConfig
 
         delta = DeltaConfig(theta_x=args.theta, theta_h=args.theta)
+    cascade = None
+    if args.cascade:
+        from repro.serving.cascade import CascadeConfig
+
+        cascade = CascadeConfig(wake_threshold=args.wake_threshold)
     pipe = KWSPipeline(
         KWSPipelineConfig(
             frontend=args.frontend, classifier=args.classifier,
-            delta=delta,
+            delta=delta, cascade=cascade,
         ),
         norm_stats=stats,
     )
@@ -149,6 +166,21 @@ def main():
         vals = list(per_stream.values())
         print(f"ΔGRU θ={args.theta:g}: effective-MAC fraction "
               f"mean {np.mean(vals):.3f} "
+              f"(min {np.min(vals):.3f} / max {np.max(vals):.3f}); "
+              f"first streams: {shown}")
+    if args.cascade:
+        # per-stream classifier duty cycle next to the effective-MAC
+        # fraction (the srv.wake_rate telemetry the stage-1 gate
+        # accumulates; composes multiplicatively with the ΔGRU
+        # sparsity in the IC energy model)
+        wr = srv.wake_rate
+        per_stream = {
+            sid: float(wr[srv.active[sid]]) for sid in sorted(detections)
+        }
+        shown = {s: round(w, 3) for s, w in list(per_stream.items())[:8]}
+        vals = list(per_stream.values())
+        print(f"cascade thr={args.wake_threshold:g}: classifier duty "
+              f"cycle (wake rate) mean {np.mean(vals):.3f} "
               f"(min {np.min(vals):.3f} / max {np.max(vals):.3f}); "
               f"first streams: {shown}")
     print("the IC serves 1 stream at 23 uW; TPU serving amortizes one "

@@ -17,7 +17,12 @@ Cortex-M7 network of [36] discussed in Section IV) — and, via
 `AcceleratorModel.effective_mac_fraction`, for *other MAC loads*: the
 ΔGRU serving backend's measured temporal sparsity (`srv.sparsity`,
 `repro.core.gru_delta`) plugs in to predict DeltaKWS-style µW/latency
-at a given skip rate (benchmarks/fig_delta_tradeoff.py).
+at a given skip rate (benchmarks/fig_delta_tradeoff.py), and via
+`AcceleratorModel.duty_cycle`, for gated workloads: the cascaded wake
+gate's measured `srv.wake_rate` (`repro.serving.cascade`) composes
+multiplicatively with the ΔGRU fraction to predict the µW of a
+classifier that sleeps through non-speech frames entirely
+(benchmarks/fig_cascade_roc.py).
 """
 
 from __future__ import annotations
@@ -54,12 +59,26 @@ class AcceleratorModel:
     # work, while the FSM overhead and the SRAM/logic leakage do not —
     # exactly the split the DeltaKWS IC reports.
     effective_mac_fraction: float = 1.0
+    # Fraction of frames the classifier runs at all (1.0 = always-on).
+    # The cascaded wake gate (`repro.serving.cascade`) measures this
+    # per stream as `srv.wake_rate`; a gated frame costs the
+    # accelerator nothing dynamic, so the time-averaged dynamic MAC
+    # power in `ICPowerModel` scales by the duty cycle while leakage
+    # (weights stay SRAM-resident) and the per-WOKEN-frame
+    # latency/cycles do not — the gate skips frames, it does not speed
+    # them up. Composes multiplicatively with effective_mac_fraction
+    # (duty cycle x within-wake ΔGRU sparsity).
+    duty_cycle: float = 1.0
 
     def __post_init__(self):
         if not 0.0 <= self.effective_mac_fraction <= 1.0:
             raise ValueError(
                 "effective_mac_fraction must be in [0, 1]; got "
                 f"{self.effective_mac_fraction}"
+            )
+        if not 0.0 <= self.duty_cycle <= 1.0:
+            raise ValueError(
+                f"duty_cycle must be in [0, 1]; got {self.duty_cycle}"
             )
 
     def effective_macs(self, config: GRUConfig) -> int:
@@ -104,10 +123,17 @@ class ICPowerModel:
         self, config: GRUConfig, frame_shift_s: float = 16e-3
     ) -> float:
         # dynamic energy scales with the MACs actually executed (the
-        # accelerator's effective_mac_fraction; 1.0 = dense); leakage is
+        # accelerator's effective_mac_fraction; 1.0 = dense) and with
+        # the fraction of frames the cascade gate wakes the classifier
+        # at all (duty_cycle; 1.0 = always-on); leakage is
         # state-independent — the weights stay SRAM-resident whether or
-        # not a ΔGRU skips their columns this frame
-        dyn = self.e_mac_j * self.accel.effective_macs(config) / frame_shift_s
+        # not a ΔGRU skips their columns (or the gate skips the frame)
+        dyn = (
+            self.e_mac_j
+            * self.accel.effective_macs(config)
+            * self.accel.duty_cycle
+            / frame_shift_s
+        )
         sram_kb = (classifier_param_bytes(config) + 1.3 * 1024) / 1024.0
         leak = self.leak_sram_w_per_kb * sram_kb + self.leak_logic_w
         return dyn + leak

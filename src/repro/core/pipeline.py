@@ -67,6 +67,7 @@ from repro.core.frontend import (
 from repro.core.gru import GRUConfig, init_gru_classifier
 from repro.core.gru_delta import DeltaConfig
 from repro.core.tdfex import TDFExConfig, TDFExState
+from repro.serving.cascade import CascadeConfig
 
 __all__ = [
     "KWSPipelineConfig",
@@ -94,6 +95,14 @@ class KWSPipelineConfig:
     # which is bit-identical to the dense base backend. Ignored by the
     # dense backends.
     delta: Optional["DeltaConfig"] = None
+    # Stage-1 wake cascade for the serving tick
+    # (`repro.serving.cascade.CascadeConfig`): an always-on detector on
+    # the feature frame gates the classifier per stream. None -> no
+    # gate (the always-dense tick); `CascadeConfig.always_on()` is
+    # bit-identical to None for every backend. Consumed only by the
+    # serving layer (`StreamingKWSServer`) — batch `features`/`logits`
+    # calls ignore it.
+    cascade: Optional["CascadeConfig"] = None
 
     def __post_init__(self):
         # The pipeline post-processes (and shapes chunks) with `fex`

@@ -21,7 +21,14 @@ WMEM-resident arithmetic, bit-identical to the QAT path; with the
 slot's state additionally carries last-transmitted memories, partial-
 sum accumulators, and skipped/total MAC counters, and the server
 exposes the measured temporal sparsity as `srv.sparsity` (per-stream
-effective-MAC fraction). This is the serve-side example driver
+effective-MAC fraction). Orthogonally, a cascaded pipeline
+(`KWSPipelineConfig.cascade`, `repro.serving.cascade`) puts a stage-1
+always-on wake detector inside the same tick: an energy/linear gate
+on the feature frame wakes the full classifier only on candidate
+speech (frozen-state hold + optional score decay while gated), with
+the measured duty cycle exposed as `srv.wake_rate`; an always-open
+gate (`CascadeConfig.always_on()`) is bit-identical to no cascade for
+every backend. This is the serve-side example driver
 (examples/serve_streaming.py).
 
 The whole per-tick device program is ONE fused jit (`_fused_tick`):
@@ -66,6 +73,7 @@ from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.core.frontend import masked_select
+from repro.serving import cascade as cascade_lib
 
 from repro.distributed.sharding import (
     STREAM_AXIS,
@@ -211,6 +219,14 @@ class ServerState:
     carry  — frontend streaming carry (filter / SRO-phase state), a dict
              of (max_streams, ...) arrays from `streaming_features_init`.
     scores — exponentially smoothed posteriors, (max_streams, K).
+    det    — stage-1 wake-gate state for a cascaded pipeline
+             (`repro.serving.cascade.init_state`: per-stream awake
+             latch, hangover countdown, woken/ticks counters, all
+             (max_streams,) leaves; all-zeros is the valid fresh
+             state). None when `pipeline.config.cascade` is None —
+             a None leaf vanishes from the pytree, so a non-cascaded
+             server keeps the exact pre-cascade state structure and
+             device programs.
 
     The pytree crosses jit as a single donated argument: every tick
     consumes the old state buffers and writes the new ones in place
@@ -220,16 +236,19 @@ class ServerState:
     gru: Tuple[jnp.ndarray, ...]
     carry: Any
     scores: jnp.ndarray
+    det: Any = None
 
 
 try:
     jax.tree_util.register_dataclass(
-        ServerState, data_fields=["gru", "carry", "scores"], meta_fields=[]
+        ServerState,
+        data_fields=["gru", "carry", "scores", "det"],
+        meta_fields=[],
     )
 except (AttributeError, TypeError):  # very old jax — manual fallback
     jax.tree_util.register_pytree_node(
         ServerState,
-        lambda s: ((s.gru, s.carry, s.scores), None),
+        lambda s: ((s.gru, s.carry, s.scores, s.det), None),
         lambda _, xs: ServerState(*xs),
     )
 
@@ -251,6 +270,16 @@ def _fused_tick(pipeline, raw_audio, params, state: ServerState, inp,
     under the mask — an idle slot's slice of every buffer is returned
     bit-identical (jnp.where keeps the old value), so a stream skipping
     a tick resumes from its own contiguous state.
+
+    With a cascade (`pipeline.config.cascade`, a static branch) the
+    stage-1 detector scores the feature frame and its gate narrows the
+    mask the classifier/scores advance under: a submitted-but-gated
+    stream's GRU state holds frozen (and its posterior optionally
+    decays toward silence), while the frontend carry and the detector
+    state still advance under the plain submitted mask — the stage-1
+    gate is always-on and consumes every frame, only the classifier
+    sleeps. An always-open gate makes ``wake == mask`` elementwise, so
+    the tick is bit-identical to the non-cascaded program.
     """
     if raw_audio:
         new_carry, fv = pipeline.streaming_features_apply(
@@ -260,21 +289,43 @@ def _fused_tick(pipeline, raw_audio, params, state: ServerState, inp,
     else:
         carry = state.carry
         fv = inp
+    casc = pipeline.config.cascade
+    if casc is not None:
+        score = cascade_lib.detector_scores(fv, casc)
+        new_det, gate = cascade_lib.gate_step(state.det, score, casc)
+        det = masked_select(mask, new_det, state.det)
+        wake = jnp.logical_and(mask, gate)
+    else:
+        det = state.det
+        wake = mask
     new_gru, logits = pipeline.streaming_logits_apply(
         params, list(state.gru), fv
     )
-    gru = tuple(masked_select(mask, tuple(new_gru), state.gru))
+    gru = tuple(masked_select(wake, tuple(new_gru), state.gru))
     probs = jax.nn.softmax(logits, axis=-1)
     smoothed = smoothing * state.scores + (1.0 - smoothing) * probs
-    scores = masked_select(mask, smoothed, state.scores)
+    scores = masked_select(wake, smoothed, state.scores)
+    if casc is not None and casc.score_decay != 1.0:
+        # submitted but gated: decay the stale posterior toward zero
+        # ("silence") while the classifier sleeps
+        gated = jnp.logical_and(mask, jnp.logical_not(wake))
+        scores = masked_select(gated, casc.score_decay * state.scores, scores)
     top = jnp.argmax(scores, axis=-1)
-    return ServerState(gru=gru, carry=carry, scores=scores), scores, top
+    return (
+        ServerState(gru=gru, carry=carry, scores=scores, det=det),
+        scores,
+        top,
+    )
 
 
 def _reset_slot(state: ServerState, slot) -> ServerState:
     """Zero one slot's slice of every state buffer (slot is traced, so
-    open/close never recompiles)."""
-    return jax.tree_util.tree_map(lambda t: t.at[slot].set(0), state)
+    open/close never recompiles). The zero is written in each leaf's
+    own dtype — the cascade's awake latch is a bool leaf, and scatter
+    of a literal int into bool is deprecated."""
+    return jax.tree_util.tree_map(
+        lambda t: t.at[slot].set(jnp.zeros((), t.dtype)), state
+    )
 
 
 class StreamingKWSServer:
@@ -351,6 +402,18 @@ class StreamingKWSServer:
             None if mesh is None
             else NamedSharding(mesh, P(STREAM_AXIS, None))
         )
+        # stage-1 detector state only when the pipeline carries a
+        # cascade — None keeps the pre-cascade pytree structure (and
+        # device programs) for plain servers
+        det = None
+        if pipeline.config.cascade is not None:
+            det = cascade_lib.init_state(
+                max_streams,
+                device=(
+                    None if mesh is None
+                    else NamedSharding(mesh, P(STREAM_AXIS))
+                ),
+            )
         self.state = ServerState(
             gru=tuple(pipeline.streaming_init(max_streams, mesh=mesh)),
             carry=pipeline.streaming_features_init(max_streams, mesh=mesh),
@@ -359,6 +422,7 @@ class StreamingKWSServer:
                 jnp.float32,
                 device=scores_sharding,
             ),
+            det=det,
         )
         self.active: Dict[int, int] = {}  # stream_id -> slot
         # slot allocation = device placement on a mesh; the router's
@@ -474,6 +538,37 @@ class StreamingKWSServer:
                 dtype=np.float32,
             )
         return np.ones((self.max_streams,), np.float32)
+
+    @property
+    def wake_rate(self) -> np.ndarray:
+        """Per-slot stage-1 wake rate, (max_streams,) float32.
+
+        For a cascaded pipeline (`pipeline.config.cascade`) this reads
+        the detector's woken/ticks counters the tick accumulates per
+        stream: the fraction of a stream's submitted ticks on which
+        the gate let the classifier advance (1.0 = always woken, 0.0 =
+        the stream never crossed the wake threshold). The mean over
+        active slots is the classifier duty cycle — it plugs straight
+        into `AcceleratorModel(duty_cycle=...)` to predict gated IC
+        µW, composing with the ΔGRU `srv.sparsity` (which, for a
+        cascaded delta server, measures sparsity *within* the woken
+        ticks — the two factors multiply).
+
+        Same telemetry contract as `sparsity`: counters reset with the
+        slot on `open_stream`, advance only under the submitted mask,
+        freeze while the stream idles, ride donation and the stream
+        mesh, and are placement-independent. Slots with no traffic —
+        and every slot of a non-cascaded server — report 1.0, so
+        callers can sweep configurations without special-casing.
+
+        An owned host copy, like `scores` (never a view of a
+        donation-bound buffer).
+        """
+        if self.state.det is None:
+            return np.ones((self.max_streams,), np.float32)
+        return np.array(
+            cascade_lib.wake_rate(self.state.det), dtype=np.float32
+        )
 
     # ---- slot lifecycle ----
 

@@ -1,6 +1,10 @@
 """Energy/latency model vs the paper's published numbers (Table II),
 plus the ΔGRU effective-MAC knob (dense fraction=1.0 stays pinned to
-the paper; fractions < 1 scale MAC cycles and dynamic power only)."""
+the paper; fractions < 1 scale MAC cycles and dynamic power only) and
+the cascade duty-cycle knob (always-on duty=1.0 likewise pinned;
+duty < 1 scales time-averaged dynamic power only — never the
+per-woken-frame latency — and composes multiplicatively with the MAC
+fraction)."""
 
 import dataclasses
 
@@ -83,6 +87,63 @@ def test_effective_mac_fraction_validated():
         AcceleratorModel(effective_mac_fraction=1.5)
     with pytest.raises(ValueError, match="effective_mac_fraction"):
         dataclasses.replace(paper_accelerator(), effective_mac_fraction=-0.1)
+
+
+def test_always_on_duty_pins_paper_numbers():
+    """duty_cycle=1.0 (explicitly constructed) must leave the
+    calibrated Table II numbers untouched."""
+    acc = AcceleratorModel(duty_cycle=1.0)
+    assert abs(acc.latency_s(GRUConfig()) * 1e3 - 12.4) < 0.1
+    pm = ICPowerModel(accel=acc)
+    assert abs(pm.accelerator_power_w(GRUConfig()) * 1e6 - 9.96) < 0.15
+    assert abs(pm.total_power_w(GRUConfig()) * 1e6 - 23.0) < 0.2
+
+
+def test_duty_cycle_scales_dynamic_power_not_latency():
+    """A gate waking the classifier on 20 % of frames: the
+    time-averaged dynamic MAC power drops 5x (leakage untouched — the
+    weights stay SRAM-resident), while the per-WOKEN-frame cycle count
+    and latency are unchanged: the gate skips frames, it does not
+    speed them up."""
+    cfg = GRUConfig()
+    gated = AcceleratorModel(duty_cycle=0.2)
+    assert gated.cycles_per_frame(cfg) == paper_accelerator().cycles_per_frame(cfg)
+    assert gated.latency_s(cfg) == paper_accelerator().latency_s(cfg)
+
+    pm_dense = paper_power_model()
+    frame = 16e-3
+    dyn_dense = pm_dense.e_mac_j * classifier_macs(cfg) / frame
+    leak = pm_dense.accelerator_power_w(cfg) - dyn_dense
+    pm_gated = ICPowerModel(accel=gated)
+    assert abs(pm_gated.accelerator_power_w(cfg) - (leak + dyn_dense * 0.2)) < 1e-9
+    assert (
+        pm_dense.total_power_w(cfg) - pm_gated.total_power_w(cfg)
+        == pytest.approx(dyn_dense * 0.8, rel=1e-6)
+    )
+
+
+def test_duty_cycle_composes_with_mac_fraction():
+    """Cascade duty cycle x ΔGRU within-wake sparsity multiply in the
+    dynamic term: duty 0.25 at fraction 0.5 -> 8x less dynamic MAC
+    power than dense always-on."""
+    cfg = GRUConfig()
+    pm_dense = paper_power_model()
+    frame = 16e-3
+    dyn_dense = pm_dense.e_mac_j * classifier_macs(cfg) / frame
+    leak = pm_dense.accelerator_power_w(cfg) - dyn_dense
+    pm = ICPowerModel(
+        accel=AcceleratorModel(duty_cycle=0.25, effective_mac_fraction=0.5)
+    )
+    assert pm.accelerator_power_w(cfg) == pytest.approx(
+        leak + dyn_dense * 0.25 * 0.5, rel=1e-6
+    )
+
+
+def test_duty_cycle_validated():
+    with pytest.raises(ValueError, match="duty_cycle"):
+        AcceleratorModel(duty_cycle=1.5)
+    with pytest.raises(ValueError, match="duty_cycle"):
+        dataclasses.replace(paper_accelerator(), duty_cycle=-0.1)
 
 
 def test_model_extrapolates_bigger_network():

@@ -12,10 +12,17 @@ idle-stream isolation, and slot-reuse hygiene across shard boundaries.
 The ΔGRU backends additionally get a cross-backend check: a θ=0 delta
 server sharded over the mesh must bit-match its dense base backend's
 single-device server (the temporal-sparsity engine survives
-partitioning), with the sparsity telemetry consistent across shards. A hypothesis property
+partitioning), with the sparsity telemetry consistent across shards.
+The cascade subsystem (`repro.serving.cascade`) gets the same
+treatment: an always-open cascaded server sharded over the mesh must
+bit-match the plain single-device server for every backend, and at a
+real wake threshold the per-stream `srv.wake_rate` telemetry must be
+placement-independent. A hypothesis property
 test drives random open/close/submit schedules against a pure-Python
 lifecycle oracle: a stream's scores depend only on its own submitted
-frames, never on other streams' traffic or its device placement. The
+frames, never on other streams' traffic or its device placement — a
+cascaded variant additionally asserts `wake_rate` resets on
+open_stream, freezes while idle, and is placement-independent. The
 donation-hazard regression (step twice without fetching scores in
 between) runs here for the sharded path and in
 tests/test_pipeline_serving.py for the single-device path.
@@ -31,6 +38,7 @@ from repro.core.fex import fit_norm_stats
 from repro.core.pipeline import KWSPipeline, KWSPipelineConfig
 from repro.distributed.sharding import STREAM_AXIS, stream_mesh
 from repro.serving.autoscale import StreamRouter, shard_of_slot
+from repro.serving.cascade import CascadeConfig
 from repro.serving.serve_loop import StreamingKWSServer
 
 from _hypothesis_compat import given, settings, st
@@ -454,6 +462,103 @@ def test_sharded_delta_sparsity_matches_single_device(norm_stats):
 
 
 # --------------------------------------------------------------------------
+# cascade: always-open sharded server == plain single-device server
+# --------------------------------------------------------------------------
+
+def test_sharded_cascade_always_open_matches_plain(backend):
+    """Cross-config AND cross-placement: an always-open cascaded server
+    sharded over the emulated mesh bit-matches the NON-cascaded
+    single-device server — scores, argmax, hidden states — for live
+    slab ticks and the scanned replay, for every backend. The gate
+    mask degenerates to the submitted mask, so the extra detector
+    leaves in `ServerState` change nothing downstream."""
+    pipe, params = backend
+    import dataclasses as _dc
+
+    pipe_casc = KWSPipeline(
+        _dc.replace(pipe.config, cascade=CascadeConfig.always_on()),
+        norm_stats=pipe.norm_stats,
+    )
+    plain = StreamingKWSServer(pipe, params, max_streams=MAX_STREAMS)
+    sharded = StreamingKWSServer(
+        pipe_casc, params, max_streams=MAX_STREAMS, devices=MESH_DEV
+    )
+    for srv in (plain, sharded):
+        for sid in range(MAX_STREAMS):
+            srv.open_stream(sid)
+    hop = pipe.chunk_samples
+    rng = np.random.default_rng(17)
+    for t in range(3):
+        slab = rng.standard_normal((MAX_STREAMS, hop)).astype(np.float32)
+        slab *= 0.05
+        mask = np.ones(MAX_STREAMS, bool)
+        mask[t::3] = False
+        s_a, t_a = plain.step_batch(slab, mask)
+        s_b, t_b = sharded.step_batch(slab, mask)
+        np.testing.assert_array_equal(s_a, s_b)
+        np.testing.assert_array_equal(t_a, t_b)
+    slab = rng.standard_normal((4, MAX_STREAMS, hop)).astype(np.float32)
+    slab *= 0.05
+    mask = rng.random((4, MAX_STREAMS)) < 0.7
+    seq_a, tops_a = plain.run_batch(slab, mask)
+    seq_b, tops_b = sharded.run_batch(slab, mask)
+    np.testing.assert_array_equal(seq_a, seq_b)
+    np.testing.assert_array_equal(tops_a, tops_b)
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b)
+        ),
+        list(plain.state.gru),
+        list(sharded.state.gru),
+    )
+    np.testing.assert_array_equal(plain.scores, sharded.scores)
+    # every submitted tick woke the classifier, on every shard
+    np.testing.assert_array_equal(
+        sharded.wake_rate, np.ones(MAX_STREAMS, np.float32)
+    )
+    # detector leaves are sharded over the stream axis like the rest
+    for leaf in jax.tree_util.tree_leaves(sharded.state.det):
+        spec = leaf.sharding.spec
+        assert spec and spec[0] == STREAM_AXIS, spec
+
+
+def test_sharded_cascade_wake_rate_matches_single_device(norm_stats):
+    """The measured per-stream wake rate is placement-independent: a
+    gated sharded server reports bit-identical `wake_rate` (and
+    scores) to its single-device twin on the same mixed loud/quiet
+    traffic."""
+    pipe = KWSPipeline(
+        KWSPipelineConfig(
+            classifier="qat",
+            cascade=CascadeConfig(wake_threshold=0.3, hangover_frames=1),
+        ),
+        norm_stats=norm_stats,
+    )
+    params = pipe.init_params(jax.random.PRNGKey(18))
+    single = StreamingKWSServer(pipe, params, max_streams=MAX_STREAMS)
+    sharded = StreamingKWSServer(
+        pipe, params, max_streams=MAX_STREAMS, devices=MESH_DEV
+    )
+    for srv in (single, sharded):
+        for sid in range(MAX_STREAMS):
+            srv.open_stream(sid)
+    rng = np.random.default_rng(19)
+    for _ in range(6):
+        # half the slots get speech-loud frames, half near-silence
+        scale = np.where(rng.random(MAX_STREAMS) < 0.5, 3.0, 0.02)
+        fv = (
+            rng.standard_normal((MAX_STREAMS, 16)) * scale[:, None]
+        ).astype(np.float32)
+        mask = rng.random(MAX_STREAMS) < 0.8
+        s_a, _ = single.step_batch(fv, mask)
+        s_b, _ = sharded.step_batch(fv, mask)
+        np.testing.assert_array_equal(s_a, s_b)
+    np.testing.assert_array_equal(single.wake_rate, sharded.wake_rate)
+    wr = sharded.wake_rate
+    assert (wr < 1.0).any() and (wr > 0.0).any()  # the gate really gated
+
+
+# --------------------------------------------------------------------------
 # property test: random lifecycles vs a pure-Python oracle
 # --------------------------------------------------------------------------
 
@@ -581,3 +686,97 @@ def oracle_servers(norm_stats):
     )
     reference = StreamingKWSServer(pipe, params, max_streams=1)
     return sharded, reference
+
+
+@pytest.fixture(scope="module")
+def cascade_oracle_servers(norm_stats):
+    """Cascaded twin of `oracle_servers`: a real wake threshold with
+    hangover, so random schedules exercise gated AND woken ticks."""
+    pipe = KWSPipeline(
+        KWSPipelineConfig(
+            classifier="qat",
+            cascade=CascadeConfig(wake_threshold=0.3, hangover_frames=1),
+        ),
+        norm_stats=norm_stats,
+    )
+    params = pipe.init_params(jax.random.PRNGKey(7))
+    sharded = StreamingKWSServer(
+        pipe, params, max_streams=8, devices=MESH_DEV
+    )
+    reference = StreamingKWSServer(pipe, params, max_streams=1)
+    return sharded, reference
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    events=st.lists(
+        st.tuples(
+            st.booleans(),  # open a new stream before this tick?
+            st.booleans(),  # close the oldest open stream first?
+            st.integers(min_value=0, max_value=255),  # submit bitmask
+        ),
+        min_size=2,
+        max_size=6,
+    ),
+)
+def test_random_schedule_cascade_wake_rate_oracle(
+    cascade_oracle_servers, seed, events
+):
+    """Random open/close/submit schedules on a GATED cascaded server:
+    each open stream's scores AND wake rate bit-match a single-device
+    replay of its own recorded frames. This pins every telemetry
+    clause at once: `wake_rate` resets on open_stream (the reference
+    starts at 1.0 and the replay reproduces it from scratch), freezes
+    while idle (ticks the stream skipped leave no trace), and is
+    independent of shard placement and other streams' traffic."""
+    sharded, reference = cascade_oracle_servers
+    for srv in (sharded, reference):
+        for sid in list(srv.active):
+            srv.close_stream(sid)
+    oracle = LifecycleOracle(sharded.max_streams, sharded.n_devices)
+    rng = np.random.default_rng(seed)
+    next_sid = 0
+
+    def do_open():
+        nonlocal next_sid
+        sharded.open_stream(next_sid)
+        oracle.open(next_sid)
+        # a freshly opened slot reads unity wake rate (reset contract)
+        assert sharded.wake_rate[sharded.active[next_sid]] == 1.0
+        next_sid += 1
+
+    do_open()
+    for want_open, want_close, submit_bits in events:
+        if want_close and len(oracle.slot_of) > 1:
+            victim = min(oracle.slot_of)
+            sharded.close_stream(victim)
+            oracle.close(victim)
+        if want_open and len(oracle.slot_of) < sharded.max_streams:
+            do_open()
+        open_sids = sorted(oracle.slot_of)
+        frames = {}
+        for i, sid in enumerate(open_sids):
+            if submit_bits >> (i % 8) & 1:
+                # mixed traffic: loud frames wake the gate, quiet ones
+                # leave it (or its hangover) to gate the classifier
+                scale = 3.0 if rng.random() < 0.5 else 0.02
+                f = (rng.standard_normal(16) * scale).astype(np.float32)
+                frames[sid] = f
+                oracle.submit(sid, f)
+        sharded.step(frames)
+    # every open stream's scores and wake rate == single-device replay
+    # of its own frames alone
+    for sid in sorted(oracle.slot_of):
+        reference.open_stream(sid)
+        assert reference.wake_rate[0] == 1.0
+        expected = np.zeros_like(np.asarray(reference.state.scores[0]))
+        for f in oracle.frames[sid]:
+            out = reference.step({sid: f})
+            expected = out[sid]["probs"]
+        slot = sharded.active[sid]
+        np.testing.assert_array_equal(sharded.scores[slot], expected)
+        np.testing.assert_array_equal(
+            sharded.wake_rate[slot], reference.wake_rate[0]
+        )
+        reference.close_stream(sid)
