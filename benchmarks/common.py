@@ -197,9 +197,16 @@ def percentile_stats(latencies_s) -> Dict[str, float]:
                        for "qat" (the pre-refactor path had no integer
                        or delta engine)
         mode           "fused" (one jitted tick per step_batch call),
-                       "legacy" (pre-refactor per-stream path), or
-                       "scan" (run_batch lax.scan replay; per-tick
-                       latency is amortized over the scanned program)
+                       "legacy" (pre-refactor per-stream path),
+                       "pipelined" (live async ingress:
+                       `repro.serving.ingress.PipelinedIngress` over
+                       step_batch_async/run_batch_async — double-
+                       buffered staging, non-blocking dispatch,
+                       deferred fetch, window-tick coalescing), or
+                       "scan" (run_batch lax.scan replay: ONE device
+                       program and one host round-trip for the whole
+                       tick sequence, so there is no per-tick latency
+                       to measure)
         kind           tick payload: "fv" = precomputed FV_Norm frames
                        (isolates serving-path overhead), "audio" = raw
                        16 ms hops (adds the frontend filter scan, a
@@ -213,8 +220,15 @@ def percentile_stats(latencies_s) -> Dict[str, float]:
         occupancy      fraction of slots with an open, submitting stream
         active_streams occupancy * max_streams, rounded, >= 1
         n_ticks        measured ticks (after warmup)
-        ticks_per_s    sustained tick throughput, 1 / mean(latency)
+        ticks_per_s    sustained tick throughput. For the blocking
+                       per-call modes (fused/legacy) this is
+                       1 / mean(latency); for scan and pipelined it is
+                       n_ticks / wall-clock — pipelined ticks overlap,
+                       so the reciprocal mean would overcount
         streams_per_s  ticks_per_s * active_streams (stream-frames/sec)
+        window         pipelined rows only: ticks coalesced into one
+                       scan dispatch by the ingress (the throughput/
+                       latency knob); None for every other mode
         sparsity       measured effective-MAC fraction, mean over the
                        point's active streams (the `srv.sparsity`
                        telemetry): < 1.0 for the ΔGRU backends when
@@ -232,8 +246,18 @@ def percentile_stats(latencies_s) -> Dict[str, float]:
                        telemetry)
         wake_threshold stage-1 wake threshold of the point's pipeline
                        (None when the sweep ran without --cascade)
-        p50_ms/p99_ms  per-tick wall latency percentiles
-        mean_ms        mean per-tick wall latency
+        p50_ms/p99_ms  per-tick wall latency percentiles. Null for scan
+                       rows: the replay returns to the host once, so
+                       per-tick percentiles do not exist there (they
+                       used to be fabricated as wall/n_ticks repeated,
+                       which made p50==p99==mean look measured).
+                       Fused/legacy rows measure each blocking call;
+                       pipelined rows measure real submit-to-scores
+                       latency per tick (commit timestamp to handle
+                       retirement — the SLO-relevant number)
+        mean_ms        mean per-tick wall latency (scan rows: the
+                       amortized wall/n_ticks, the only latency-like
+                       number a single-program replay has)
       scaling[]      per device count: sustained scan-fv ticks/sec at
                      256 streams and the ratio vs the devices=1 row
                      (on emulated CPU meshes this measures SPMD
@@ -244,6 +268,14 @@ def percentile_stats(latencies_s) -> Dict[str, float]:
                      ticks/sec at 256 streams, full occupancy, fv kind,
                      devices=1; "speedup_live" carries the per-call
                      fused ratio
+      slo            the live-serving latency gate ("ok" bool, also
+                     "p99_ok"/"ratio_ok"): pipelined p99 <= the 16 ms
+                     tick budget at 256 streams AND pipelined
+                     throughput >= 0.5x the scan ceiling at 64 and 256
+                     streams ("pipelined_vs_scan", keyed by stream
+                     count), all at full occupancy, fv kind, devices=1
+                     on the sweep's first classifier;
+                     `--fail-on-slo` exits non-zero when violated
     """
     lat = np.asarray(latencies_s, np.float64) * 1e3
     return {

@@ -10,9 +10,16 @@ smoothing) is one fused jit over donated state buffers; --offline
 replays each stream's full buffered audio through the server's
 `lax.scan` driver instead of live per-tick calls.
 
+`--pipelined` swaps the blocking live loop for the async ingress
+(`repro.serving.ingress.PipelinedIngress`): double-buffered host
+staging, non-blocking dispatch, deferred score fetch, and `--window`
+ticks coalesced per device dispatch — same score trajectory
+bit-identically, fewer host round-trips.
+
   PYTHONPATH=src python examples/serve_streaming.py [--streams 32]
       [--frontend software] [--classifier qat|integer]
       [--cascade [--wake-threshold 0.1]] [--offline]
+      [--pipelined [--window 4]]
 """
 
 import argparse
@@ -67,6 +74,17 @@ def main():
     ap.add_argument("--offline", action="store_true",
                     help="replay buffered audio via the lax.scan driver "
                          "(server.run) instead of live per-tick step calls")
+    ap.add_argument("--pipelined", action="store_true",
+                    help="serve live ticks through the async ingress "
+                         "(repro.serving.ingress.PipelinedIngress): "
+                         "double-buffered staging, non-blocking "
+                         "dispatch, scores fetched via deferred "
+                         "TickHandles — bit-identical to the blocking "
+                         "loop, fewer host round-trips")
+    ap.add_argument("--window", type=int, default=4,
+                    help="ticks coalesced into one scan dispatch by "
+                         "--pipelined (the throughput/latency knob; "
+                         "1 = one fused tick per dispatch)")
     ap.add_argument("--devices", type=int, default=None,
                     help="shard the stream-slot axis over the first N "
                          "visible devices (('stream',) mesh; default: "
@@ -125,7 +143,12 @@ def main():
 
     hop = pipe.chunk_samples  # 256 samples = 16 ms @ 16 kHz
     n_frames = min(audio.shape[1] // hop, int(args.seconds / 16e-3))
-    mode = "offline lax.scan replay" if args.offline else "live fused ticks"
+    if args.offline:
+        mode = "offline lax.scan replay"
+    elif args.pipelined:
+        mode = f"live async ingress (depth 2, window {args.window})"
+    else:
+        mode = "live fused ticks"
     print(f"serving {args.streams} streams x {n_frames} raw-audio hops "
           f"({hop} samples / 16 ms each) via frontend "
           f"{args.frontend!r}, classifier {args.classifier!r} "
@@ -137,6 +160,23 @@ def main():
                        for sid in range(args.streams)})
         for sid, r in out.items():
             detections[sid] = r["top"]
+    elif args.pipelined:
+        from repro.serving.ingress import PipelinedIngress
+
+        ing = PipelinedIngress(srv, dim=hop, window=args.window)
+        slots = {sid: srv.active[sid] for sid in range(args.streams)}
+        for t in range(n_frames):
+            slab, mask = ing.stage()  # host staging overlaps the
+            for sid, slot in slots.items():  # in-flight dispatch
+                slab[slot] = audio[sid, t * hop:(t + 1) * hop]
+                mask[slot] = True
+            ing.commit(meta=t)  # non-blocking past the first `depth`
+        # every score row is in some retired handle; the final tick's
+        # top row lives in the last handle's last window row
+        tops = ing.drain()[-1].top
+        tops = tops[-1] if tops.ndim == 2 else tops  # window > 1
+        for sid, slot in slots.items():
+            detections[sid] = int(tops[slot])
     else:
         for t in range(n_frames):
             chunk = {sid: audio[sid, t * hop:(t + 1) * hop]

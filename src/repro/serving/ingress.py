@@ -1,0 +1,386 @@
+"""Async double-buffered ingress for the streaming KWS server.
+
+The fused tick (`repro.serving.serve_loop._fused_tick`) is one device
+program, but the live `step_batch` path around it is synchronous: build
+the slab, dispatch, then BLOCK on the device-to-host score fetch before
+the next tick may even be assembled. On an async-dispatch backend the
+device is idle while the host stages the next slab and the host is idle
+while the device computes — which is exactly the live-vs-scan
+throughput gap `BENCH_serve.json` measures (the `lax.scan` replay never
+returns to the host between ticks).
+
+This module closes that gap without touching the tick itself:
+
+  * `TickHandle` — the deferred result of one dispatched tick. The
+    server hands it back immediately after (non-blocking) dispatch; the
+    scores materialize on first `result()`. The handle owns device-side
+    copies of the tick's outputs, so it stays valid however many later
+    ticks donate the `ServerState` buffers the raw outputs alias — a
+    handle fetched two ticks late reads exactly what a synchronous
+    fetch would have.
+  * `PipelinedIngress` — preallocated ping-pong host staging. `stage()`
+    hands out a (slab, mask) buffer pair to assemble the next tick into
+    while the previous tick is still in flight; `commit()` dispatches
+    it via `StreamingKWSServer.step_batch_async`. A buffer is reused
+    only after the tick that consumed it has been forced to completion
+    (the `depth`-deep FIFO), so host writes can never race the device's
+    read of a staged slab. `window=K` coalesces K committed ticks into
+    one `run_batch_async` scan dispatch — the fixed per-dispatch host
+    cost amortizes K-fold at (K-1) ticks of added latency.
+  * `TickCoalescer` — micro-batched arrival merging: per-stream frames
+    arriving within one 16 ms window coalesce into a single staged
+    tick, flushed when every open stream has submitted, when the window
+    deadline passes (`poll`), or when a stream submits a second frame
+    (which by definition belongs to the next tick).
+
+The pipelined path is BIT-identical to the synchronous `step_batch`
+sequence: it dispatches the same jitted program on the same operands in
+the same order — only the host-side fetch moves later in time
+(tests/test_serve_async.py proves it for every classifier backend,
+cascaded and sharded included).
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+__all__ = [
+    "TickHandle",
+    "PipelinedIngress",
+    "TickCoalescer",
+    "CoalescedTick",
+]
+
+
+class TickHandle:
+    """Deferred result of one asynchronously dispatched serving tick.
+
+    Holds device-side OWNED copies of the tick's (scores, top) outputs
+    — never the raw tick outputs, which can alias `ServerState` buffers
+    that the NEXT tick donates. `result()` blocks until the tick (and
+    the copy chained behind it) has executed, materializes owned host
+    arrays, and caches them; the device arrays are dropped at that
+    point so steady-state serving holds at most `depth` tick outputs.
+
+    `meta` is caller-owned freight (e.g. a submit timestamp or the
+    {stream_id: slot} map of a coalesced tick); `done_at` records the
+    host clock at the moment `result()` first returned, for SLO-style
+    latency accounting.
+    """
+
+    __slots__ = ("_scores", "_top", "_host", "meta", "done_at")
+
+    def __init__(self, scores, top, meta: Any = None):
+        self._scores = scores
+        self._top = top
+        self._host: Optional[Tuple[np.ndarray, np.ndarray]] = None
+        self.meta = meta
+        self.done_at: Optional[float] = None
+
+    def ready(self) -> bool:
+        """True when the tick has finished executing (non-blocking)."""
+        if self._host is not None:
+            return True
+        try:
+            return bool(self._scores.is_ready() and self._top.is_ready())
+        except AttributeError:  # non-jax array stand-ins
+            return True
+
+    def result(self) -> Tuple[np.ndarray, np.ndarray]:
+        """(scores (N, K), top (N,)) as owned host arrays; blocks until
+        the tick has executed. Idempotent — later calls return the
+        cached copy, so fetching a handle after further ticks (or slot
+        resets) ran is always safe."""
+        if self._host is None:
+            self._host = (np.array(self._scores), np.array(self._top))
+            self._scores = self._top = None
+            self.done_at = time.perf_counter()
+        return self._host
+
+    @property
+    def scores(self) -> np.ndarray:
+        return self.result()[0]
+
+    @property
+    def top(self) -> np.ndarray:
+        return self.result()[1]
+
+
+class PipelinedIngress:
+    """Double-buffered slab staging over the server's async dispatch.
+
+    `depth` preallocated (slab, mask) host buffer pairs cycle
+    round-robin; at most `depth` dispatches are in flight. `stage()`
+    returns the next pair for the caller to assemble a tick into —
+    forcing the dispatch that consumed this buffer `depth` cycles ago
+    to completion first, which both bounds the pipeline and guarantees
+    the buffer being handed out is no longer being read by the device.
+    `commit()` dispatches without blocking. Completed handles
+    accumulate in FIFO order; collect them with `retired()` or force
+    everything with `drain()`.
+
+    depth=1 degrades to the synchronous cadence (every dispatch
+    completes before the next is staged); depth=2 is classic double
+    buffering — host staging of tick N+1 overlaps device execution of
+    tick N.
+
+    `window` is the throughput/latency knob: with window=1 (default)
+    every `commit()` dispatches one fused tick via `step_batch_async`
+    and `handle.meta` is that tick's meta. With window=K, K
+    consecutively committed ticks coalesce into ONE device dispatch
+    (`run_batch_async`: a length-K scan of the same fused tick body,
+    bit-identical to K sequential ticks) — amortizing the fixed
+    per-dispatch host cost K-fold, which is what closes the
+    live-vs-scan throughput gap on a dispatch-bound host. The window's
+    handle materializes (K, N, C) scores / (K, N) tops, `handle.meta`
+    is the list of the K per-tick metas in commit order, and a tick's
+    scores arrive only when its window flushes — at a 16 ms tick
+    cadence that bounds added latency at (K-1) ticks, so keep K small
+    (2-8) for live serving. `commit()` returns the handle on the
+    window-filling commit and None otherwise; `flush()` force-
+    dispatches a partial window (scan length = ticks staged so far).
+    """
+
+    def __init__(self, server, dim: int, depth: int = 2,
+                 window: int = 1):
+        if depth < 1:
+            raise ValueError(f"depth must be >= 1, got {depth}")
+        if window < 1:
+            raise ValueError(f"window must be >= 1, got {window}")
+        server._is_raw(int(dim))  # canonical kind validation, up front
+        self.server = server
+        self.dim = int(dim)
+        self.depth = depth
+        self.window = window
+        n = server.max_streams
+        self._slabs = [
+            np.zeros((window, n, self.dim), np.float32)
+            for _ in range(depth)
+        ]
+        self._masks = [
+            np.zeros((window, n), bool) for _ in range(depth)
+        ]
+        # (buffer index, handle) in dispatch order; len <= depth
+        self._fifo: collections.deque = collections.deque()
+        self._retired: List[TickHandle] = []
+        self._cursor = 0
+        self._fill = 0  # ticks staged+committed into the cursor buffer
+        self._metas: List[Any] = []
+        self._staged = False
+
+    @property
+    def in_flight(self) -> int:
+        return len(self._fifo)
+
+    @property
+    def pending_ticks(self) -> int:
+        """Ticks committed into the current window but not dispatched."""
+        return self._fill
+
+    def stage(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Next (slab, mask) staging pair, mask cleared. Blocks only
+        when the pipeline is full (forces the oldest in-flight
+        dispatch)."""
+        if self._staged:
+            raise RuntimeError("stage() called again before commit()")
+        i = self._cursor
+        if self._fill == 0:
+            # about to write row 0 of buffer i: the dispatch that
+            # consumed it (if any) is the FIFO front — buffers cycle
+            # round-robin and retire in dispatch order
+            while self._fifo and self._fifo[0][0] == i:
+                _, h = self._fifo.popleft()
+                h.result()
+                self._retired.append(h)
+        self._staged = True
+        mask = self._masks[i][self._fill]
+        mask[:] = False
+        return self._slabs[i][self._fill], mask
+
+    def commit(self, meta: Any = None) -> Optional[TickHandle]:
+        """Commit the staged tick; dispatches (non-blocking) when the
+        window is full. Returns the window's handle on the dispatching
+        commit, None while the window is still filling."""
+        if not self._staged:
+            raise RuntimeError("commit() without a prior stage()")
+        self._staged = False
+        self._metas.append(meta)
+        self._fill += 1
+        if self._fill == self.window:
+            return self._dispatch()
+        return None
+
+    def flush(self) -> Optional[TickHandle]:
+        """Dispatch the partially filled window now (no-op when empty).
+        A partial window scans only the ticks actually staged — never
+        padded no-op ticks — so the state trajectory stays identical."""
+        if self._staged:
+            raise RuntimeError("flush() with a stage() pending commit()")
+        if self._fill == 0:
+            return None
+        return self._dispatch()
+
+    def _dispatch(self) -> TickHandle:
+        i, k = self._cursor, self._fill
+        if self.window == 1:
+            handle = self.server.step_batch_async(
+                self._slabs[i][0], self._masks[i][0]
+            )
+            handle.meta = self._metas[0]
+        else:
+            handle = self.server.run_batch_async(
+                self._slabs[i][:k], self._masks[i][:k]
+            )
+            handle.meta = list(self._metas)
+        self._fifo.append((i, handle))
+        self._cursor = (i + 1) % self.depth
+        self._fill = 0
+        self._metas = []
+        return handle
+
+    def retired(self) -> List[TickHandle]:
+        """Handles forced to completion so far, in dispatch order
+        (clears the internal list)."""
+        out, self._retired = self._retired, []
+        return out
+
+    def drain(self) -> List[TickHandle]:
+        """Flush the pending window, force every in-flight dispatch,
+        and return ALL completed handles (previously retired +
+        just-drained), in dispatch order."""
+        self.flush()
+        while self._fifo:
+            _, h = self._fifo.popleft()
+            h.result()
+            self._retired.append(h)
+        return self.retired()
+
+
+@dataclasses.dataclass
+class CoalescedTick:
+    """Meta freight of one coalesced tick's handle: which streams
+    submitted (and the slot each occupied AT DISPATCH TIME — the
+    mapping to index the handle's score rows with, immune to later
+    close/reopen), plus the window's host timestamps."""
+
+    sids: Dict[int, int]
+    staged_at: float
+    flushed_at: Optional[float] = None
+
+
+class TickCoalescer:
+    """Merge sub-window per-stream arrivals into single dispatched ticks.
+
+    Live traffic rarely arrives slab-shaped: each stream's 16 ms hop
+    lands on its own schedule. Dispatching a full-slab tick per arrival
+    wastes the batch; waiting for stragglers forever stalls it. The
+    coalescer stages arrivals into one pending tick and flushes it when
+
+      * every open stream has submitted (the tick is full),
+      * the window deadline (`window_ms` after the first arrival)
+        passes — checked by `poll()`, or
+      * a stream submits a SECOND frame (which belongs to the next
+        tick: the pending one flushes first, then the new frame opens
+        the next window).
+
+    Flushing dispatches through a per-kind `PipelinedIngress`, so
+    coalescing composes with double buffering: the flushed tick's
+    handle materializes while the next window fills. Completed handles
+    (meta = `CoalescedTick`) are collected via `retired()` / `drain()`.
+
+    `clock` is injectable for deterministic tests; `now` may also be
+    passed explicitly to `add`/`poll`/`flush`.
+    """
+
+    def __init__(self, server, window_ms: float = 16.0, depth: int = 2,
+                 clock: Callable[[], float] = time.monotonic):
+        if window_ms <= 0:
+            raise ValueError(f"window_ms must be > 0, got {window_ms}")
+        self.server = server
+        self.window_s = window_ms * 1e-3
+        self.depth = depth
+        self.clock = clock
+        self._ingress: Dict[int, PipelinedIngress] = {}
+        self._pending = None  # (ingress, slab, mask, CoalescedTick, deadline)
+        self._retired: List[TickHandle] = []
+
+    @property
+    def pending_streams(self) -> int:
+        """Streams staged in the currently open window (0 = no window)."""
+        return 0 if self._pending is None else len(self._pending[3].sids)
+
+    def add(self, stream_id: int, frame, now: Optional[float] = None
+            ) -> List[TickHandle]:
+        """Stage one stream's frame; returns any handles this call
+        retired (a second-frame or tick-full flush may complete older
+        ticks)."""
+        now = self.clock() if now is None else now
+        if stream_id not in self.server.active:
+            raise ValueError(f"stream {stream_id} not open")
+        frame = np.asarray(frame, np.float32)
+        dim = int(frame.shape[-1])
+        self.server._is_raw(dim)  # canonical kind/width validation
+        if self._pending is not None and self._pending[0].dim != dim:
+            raise ValueError(
+                "all frames in one tick must be the same kind; pending "
+                f"window holds dim {self._pending[0].dim}, got {dim} "
+                "(flush() the window before switching kinds)"
+            )
+        if self._pending is not None and stream_id in self._pending[3].sids:
+            # a stream's second frame belongs to the NEXT tick
+            self.flush(now)
+        if self._pending is None:
+            ing = self._ingress.get(dim)
+            if ing is None:
+                ing = PipelinedIngress(self.server, dim, depth=self.depth)
+                self._ingress[dim] = ing
+            slab, mask = ing.stage()
+            meta = CoalescedTick(sids={}, staged_at=now)
+            self._pending = (ing, slab, mask, meta, now + self.window_s)
+        ing, slab, mask, meta, _deadline = self._pending
+        slot = self.server.active[stream_id]
+        slab[slot] = frame
+        mask[slot] = True
+        meta.sids[stream_id] = slot
+        if len(meta.sids) >= len(self.server.active):
+            self.flush(now)
+        return self.retired()
+
+    def poll(self, now: Optional[float] = None) -> List[TickHandle]:
+        """Flush the pending window iff its deadline has passed; returns
+        handles retired so far either way."""
+        now = self.clock() if now is None else now
+        if self._pending is not None and now >= self._pending[4]:
+            self.flush(now)
+        return self.retired()
+
+    def flush(self, now: Optional[float] = None) -> Optional[TickHandle]:
+        """Dispatch the pending window as one tick (no-op when empty)."""
+        if self._pending is None:
+            return None
+        now = self.clock() if now is None else now
+        ing, _slab, _mask, meta, _deadline = self._pending
+        self._pending = None
+        meta.flushed_at = now
+        handle = ing.commit(meta=meta)
+        self._retired.extend(ing.retired())
+        return handle
+
+    def retired(self) -> List[TickHandle]:
+        """Completed handles collected so far (clears the list)."""
+        for ing in self._ingress.values():
+            self._retired.extend(ing.retired())
+        out, self._retired = self._retired, []
+        return out
+
+    def drain(self) -> List[TickHandle]:
+        """Flush the pending window and force every in-flight tick."""
+        self.flush()
+        for ing in self._ingress.values():
+            self._retired.extend(ing.drain())
+        return self.retired()

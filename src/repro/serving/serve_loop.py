@@ -89,6 +89,7 @@ from repro.distributed.sharding import (
 )
 from repro.models.registry import get_backbone
 from repro.serving.autoscale import StreamRouter
+from repro.serving.ingress import TickHandle
 
 Pytree = Any
 
@@ -348,6 +349,14 @@ class StreamingKWSServer:
     replays pre-buffered audio through a `lax.scan` over the same tick
     body.
 
+    Live ingress comes in two cadences: `step_batch` (synchronous —
+    dispatch, then block on the score fetch) and `step_batch_async`
+    (non-blocking — returns a `TickHandle` whose scores materialize
+    later, so tick N-1's results are fetched while tick N runs). The
+    double-buffered staging and micro-batch coalescing around the async
+    path live in `repro.serving.ingress`; both cadences drive the same
+    device program and are bit-identical.
+
     Sharding: ``devices=N`` (first N visible devices) or an explicit
     ``mesh=`` (a 1-D `stream_mesh`) shards the slot axis of every state
     buffer, slab, and mask over the mesh and replicates the params —
@@ -379,6 +388,20 @@ class StreamingKWSServer:
             raise ValueError(
                 f"max_streams={max_streams} must divide over "
                 f"{self.n_devices} devices"
+            )
+        # `_is_raw` dispatches on the trailing dim alone, so a geometry
+        # where a raw hop and an FV_Norm frame have the SAME width would
+        # silently route every tick down the raw-audio path. The paper's
+        # geometry (256-sample hops, 16 channels) never collides; any
+        # config that does is rejected here, at construction, instead of
+        # misclassifying ticks at serve time.
+        if pipeline.chunk_samples == pipeline.config.fex.num_channels:
+            raise ValueError(
+                "ambiguous serving geometry: chunk_samples == "
+                f"fex.num_channels == {pipeline.chunk_samples}, so raw "
+                "audio hops and FV_Norm frames are indistinguishable by "
+                "width; change fex.fs_audio / frame_shift_ms / "
+                "num_channels so the two differ"
             )
         self.pipeline = pipeline
         # Backend-shape the params once (e.g. classifier="integer"
@@ -480,6 +503,15 @@ class StreamingKWSServer:
         self._run_fv = jax.jit(
             functools.partial(_run_scan, pipeline, False), **run_kw
         )
+        # Device-side ownership copy for the async path: the fused
+        # tick's (scores, top) outputs can alias the new ServerState's
+        # buffers, which the NEXT tick donates — a deferred host fetch
+        # of the raw outputs would read garbage. jnp.copy under jit
+        # (no donation) always produces fresh buffers, dispatched
+        # asynchronously right behind the tick, so a TickHandle stays
+        # valid however late it is fetched. Shardings are inherited
+        # from the inputs, so the same program serves the mesh path.
+        self._own = jax.jit(lambda s, t: (jnp.copy(s), jnp.copy(t)))
 
     # ---- compatibility views of the fused state ----
 
@@ -584,10 +616,25 @@ class StreamingKWSServer:
         self.state = self._reset(self.state, jnp.int32(slot))
 
     def close_stream(self, stream_id: int):
+        # validate before touching the router: a raw KeyError from
+        # active.pop leaked bookkeeping internals for double-closes and
+        # never-opened ids
+        if stream_id not in self.active:
+            raise ValueError(f"stream {stream_id} not open")
         slot = self.active.pop(stream_id)
         self.router.release(slot)
 
     # ---- serving ----
+
+    def _require_open(self, stream_ids) -> None:
+        """Reject ticks naming unopened streams BEFORE any slab or
+        state mutation — a bad tick must leave the server bit-unchanged
+        (the pre-validation code KeyError'd out of `_slab` mid-build)."""
+        unknown = [sid for sid in stream_ids if sid not in self.active]
+        if unknown:
+            raise ValueError(
+                f"stream(s) {sorted(unknown)} not open"
+            )
 
     def _is_raw(self, dim: int) -> bool:
         """The single kind-dispatch site: True for raw audio hops, False
@@ -606,6 +653,7 @@ class StreamingKWSServer:
     def _slab(self, frames: Dict[int, np.ndarray]):
         """{sid: frame} -> (dense slab, mask) host-side; kind validation
         happens downstream in `step_batch`."""
+        self._require_open(frames)
         dims = {int(np.shape(f)[-1]) for f in frames.values()}
         if len(dims) > 1:
             raise ValueError(
@@ -633,24 +681,46 @@ class StreamingKWSServer:
 
         Returns (scores (max_streams, K), top (max_streams,)) as host
         arrays; rows of unsubmitted slots hold their previous values.
+        The arrays are OWNED copies (never views of donation-bound
+        buffers): this is `step_batch_async` fetched immediately.
         """
-        slab, mask = jnp.asarray(slab), jnp.asarray(mask)
+        return self.step_batch_async(slab, mask).result()
+
+    def step_batch_async(self, slab, mask) -> TickHandle:
+        """Non-blocking tick: dispatch and return a deferred handle.
+
+        Same operands and same device program as `step_batch`, but the
+        host is NOT blocked on the device-to-host score fetch — the
+        returned `TickHandle` materializes (scores, top) on its first
+        `result()` call. Dispatching tick N+1 before fetching tick N's
+        handle overlaps host slab staging with device execution (the
+        async ingress path: `repro.serving.ingress.PipelinedIngress`
+        does the buffer discipline, `TickCoalescer` the sub-window
+        arrival merging), which is what closes the live-vs-scan
+        throughput gap.
+
+        The handle owns device-side copies of the tick's outputs
+        (dispatched right behind the tick, still non-blocking), so it
+        survives any number of later ticks donating the `ServerState`
+        buffers the raw outputs alias — fetch it as late as you like.
+        The state trajectory is bit-identical to the synchronous
+        `step_batch` sequence: async moves only WHEN the host reads the
+        results, never what the device computes.
+
+        Host buffers go straight into the jit call — an explicit
+        `jnp.asarray` staging hop here measured ~0.35 ms/tick extra on
+        a single-core host, most of the live-vs-scan dispatch gap.
+        """
         tick = (
             self._tick_audio
-            if self._is_raw(int(slab.shape[-1]))
+            if self._is_raw(int(np.shape(slab)[-1]))
             else self._tick_fv
         )
         self.state, scores, top = tick(
             self.params, self.state, slab, mask,
             self.frontend_state, self.smoothing,
         )
-        # np.array (owned copy), NOT np.asarray: the tick's scores
-        # output can alias the new state's scores buffer, and that
-        # buffer is DONATED to the next tick — a zero-copy view would
-        # be read-after-donation garbage the second time the caller
-        # looks at it. Copying (max_streams, K) floats per tick is
-        # noise next to the tick itself.
-        return np.array(scores), np.array(top)
+        return TickHandle(*self._own(scores, top))
 
     def step(self, frames: Dict[int, np.ndarray]) -> Dict[int, dict]:
         """frames: stream_id -> FV_Norm (C,) or raw audio hop (S,).
@@ -682,21 +752,37 @@ class StreamingKWSServer:
         a host round-trip every 16 ms. Compiles once per (n_ticks, kind).
 
         Returns (scores_seq (n_ticks, N, K), tops (n_ticks, N)) as host
-        arrays and advances the server state by n_ticks.
+        arrays and advances the server state by n_ticks. The arrays are
+        owned copies, never views of donation-bound buffers: this is
+        `run_batch_async` fetched immediately.
         """
-        slab, mask = jnp.asarray(slab), jnp.asarray(mask)
+        return self.run_batch_async(slab, mask).result()
+
+    def run_batch_async(self, slab, mask) -> TickHandle:
+        """Non-blocking window dispatch: `run_batch` returning a handle.
+
+        Scan-replays a (window, max_streams, S|C) slab of consecutive
+        ticks as ONE device program (state donated across ticks inside
+        the scan) and returns immediately; the handle's `result()` is
+        (scores_seq (window, N, K), tops (window, N)). Because the scan
+        body is the very `_fused_tick` the live path jits, the state
+        trajectory and every per-tick score row are bit-identical to
+        `window` sequential `step_batch` calls — which is what lets the
+        async ingress amortize the per-dispatch host cost over a whole
+        window (`PipelinedIngress(window=K)`) without touching the
+        correctness story. Same owned-copy fetch discipline as
+        `step_batch_async`.
+        """
         run = (
             self._run_audio
-            if self._is_raw(int(slab.shape[-1]))
+            if self._is_raw(int(np.shape(slab)[-1]))
             else self._run_fv
         )
         self.state, scores_seq, tops = run(
             self.params, self.state, slab, mask,
             self.frontend_state, self.smoothing,
         )
-        # owned copies, not views of donation-bound buffers (see
-        # step_batch)
-        return np.array(scores_seq), np.array(tops)
+        return TickHandle(*self._own(scores_seq, tops))
 
     def run(self, buffers: Dict[int, np.ndarray]) -> Dict[int, dict]:
         """Offline replay: buffered audio -> per-tick posteriors, scanned.
@@ -717,6 +803,7 @@ class StreamingKWSServer:
         """
         if not buffers:
             return {}
+        self._require_open(buffers)
         hop = self.pipeline.chunk_samples
         ticks = {sid: len(np.asarray(b)) // hop for sid, b in buffers.items()}
         n_ticks = max(ticks.values())

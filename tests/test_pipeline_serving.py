@@ -504,3 +504,80 @@ def test_server_state_is_donation_safe_pytree():
         ),
         srv.state, rebuilt,
     )
+
+
+# --------------------------------------------------------------------------
+# lifecycle error hygiene: canonical ValueError, no partial mutation
+# --------------------------------------------------------------------------
+
+def test_close_stream_never_opened_raises_value_error():
+    """Closing an id that was never opened must raise the canonical
+    ValueError, not leak a raw KeyError from the slot bookkeeping."""
+    _, srv = _server(seed=20)
+    with pytest.raises(ValueError, match="stream 99 not open"):
+        srv.close_stream(99)
+    # the router's free list must be untouched by the rejected close
+    srv.open_stream(1)
+    assert srv.active == {1: 0}
+
+
+def test_close_stream_double_close_raises_value_error():
+    _, srv = _server(seed=20)
+    srv.open_stream(7)
+    srv.close_stream(7)
+    with pytest.raises(ValueError, match="stream 7 not open"):
+        srv.close_stream(7)
+    # the slot freed by the first close is still reusable
+    srv.open_stream(8)
+    assert 8 in srv.active
+
+
+def _state_snapshot(srv):
+    return [np.asarray(leaf).copy()
+            for leaf in jax.tree_util.tree_leaves(srv.state)]
+
+
+def test_step_unopened_stream_rejected_before_any_mutation():
+    """A tick naming an unopened stream must raise the canonical
+    ValueError and leave the server BIT-unchanged — the pre-validation
+    code KeyError'd out of the slab build mid-tick."""
+    pipe, srv = _server(seed=21)
+    srv.open_stream(1)
+    srv.open_stream(2)
+    fv = np.ones(16, np.float32)
+    srv.step({1: fv, 2: fv})  # advance to a non-trivial state
+    before = _state_snapshot(srv)
+    active_before = dict(srv.active)
+    with pytest.raises(ValueError, match=r"stream\(s\) \[99\] not open"):
+        srv.step({1: fv, 99: fv})
+    after = _state_snapshot(srv)
+    assert len(before) == len(after)
+    for a, b in zip(before, after):
+        np.testing.assert_array_equal(a, b)
+    assert srv.active == active_before
+    # multiple unknown ids are all reported, sorted
+    with pytest.raises(
+        ValueError, match=r"stream\(s\) \[41, 99\] not open"
+    ):
+        srv.step({99: fv, 41: fv})
+    # the offline replay driver shares the validation
+    with pytest.raises(ValueError, match=r"stream\(s\) \[50\] not open"):
+        srv.run({50: np.zeros(srv.pipeline.chunk_samples * 2, np.float32)})
+
+
+def test_ambiguous_serving_geometry_rejected_at_construction():
+    """A config where a raw audio hop and an FV_Norm frame have the
+    same width would make `_is_raw` silently route every tick down the
+    raw-audio path; the server must refuse to build. (The paper's
+    geometry — 256-sample hops vs 16 channels — never collides; this
+    uses fs_audio=1000 Hz so one 16 ms hop is exactly 16 samples.)"""
+    from repro.core.fex import FExConfig
+
+    cfg = KWSPipelineConfig(
+        use_norm=False, fex=FExConfig(fs_audio=1000.0)
+    )
+    pipe = KWSPipeline(cfg)
+    assert pipe.chunk_samples == pipe.config.fex.num_channels == 16
+    params = pipe.init_params(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="ambiguous serving geometry"):
+        StreamingKWSServer(pipe, params, max_streams=4)
