@@ -175,6 +175,10 @@ def percentile_stats(latencies_s) -> Dict[str, float]:
 
       backend        jax backend the sweep ran on ("cpu" / "tpu" / ...)
       frontend       registered FeatureFrontend of the benched pipeline
+      tick_impl      requested tick implementation for the sweep's
+                     non-legacy servers (--tick-impl: "auto" / "xla" /
+                     "fused-pallas" / "fused-interpret"); each row
+                     records what "auto" resolved to
       classifiers    registered ClassifierBackend keys the sweep covered
       theta          ΔGRU threshold (Q6.8 value units) the delta rows
                      ran at (--theta; dense rows are unaffected)
@@ -211,6 +215,19 @@ def percentile_stats(latencies_s) -> Dict[str, float]:
                        (isolates serving-path overhead), "audio" = raw
                        16 ms hops (adds the frontend filter scan, a
                        cost shared by every mode)
+        tick_impl      resolved tick implementation the row's server
+                       ran ("xla" = one fused XLA program,
+                       "fused-pallas" = the whole tick as ONE Pallas
+                       megakernel over stream blocks,
+                       "fused-interpret" = the same kernel body under
+                       the Pallas interpreter); None for the legacy
+                       path, which predates tick_impl
+        tick_dispatch  kernel dispatch tier of the row's ticks ("xla" /
+                       "pallas" / "interpret" —
+                       `repro.kernels.dispatch` naming); None for
+                       legacy rows
+        jax_backend    jax backend the row ran on (repeated per row so
+                       rows merged across artifacts stay attributable)
         devices        device count the row ran on; > 1 means the slot
                        axis was sharded over a ("stream",) mesh (bit-
                        identical to devices=1 — the row measures pure
@@ -276,6 +293,18 @@ def percentile_stats(latencies_s) -> Dict[str, float]:
                      count), all at full occupancy, fv kind, devices=1
                      on the sweep's first classifier;
                      `--fail-on-slo` exits non-zero when violated
+      sparsity_speedup
+                     the tick-kernel claim: the fused delta tick
+                     benched against ITSELF across ΔGRU thresholds
+                     (rows[] of {theta, mean_ms, ticks_per_s,
+                     sparsity} at 64 streams, fv ticks, on the fused
+                     tier the platform executes — "fused-pallas" on
+                     TPU, else "fused-interpret").
+                     "speedup_vs_dense" = t(θ=0)/t(θ=0.15); "ok"
+                     gates it >= 1.5x only when "gated" is true (a
+                     real accelerator ran the pallas tier), else None
+                     — on CPU only "monotone_in_theta" (fused tick
+                     times non-increasing in θ) is meaningful
     """
     lat = np.asarray(latencies_s, np.float64) * 1e3
     return {

@@ -250,6 +250,7 @@ def delta_gru_cell(
     x: jnp.ndarray,
     config: GRUConfig,
     thetas: Tuple[int, int],
+    matmul=None,
 ) -> Tuple[Dict[str, jnp.ndarray], jnp.ndarray]:
     """One ΔGRU step, QAT float domain: x (B, I) -> (new state, h' (B, H)).
 
@@ -257,23 +258,30 @@ def delta_gru_cell(
     (quantized gate outputs, ROM-faithful ordering); only the way the
     two matmul preactivations are produced differs — incrementally from
     the thresholded deltas instead of densely from x and h.
+
+    ``matmul`` overrides how a Δ·W contribution is evaluated (default:
+    dense ``dx @ w``). The fused-tick megakernel passes its gather-
+    compacted sparse product here (`repro.kernels.tick_fused`), which
+    multiplies only the firing columns — bit-identical by the grid
+    argument above, but with work proportional to the fire count.
     """
     aspec = config.act_spec
     w_i, w_h, b_i, b_h = _layer_weights(layer, config.weight_spec)
     tx, th = thetas
     scale = quant.ACT_Q6_8.scale
+    mm = (lambda d, w: d @ w) if matmul is None else matmul
 
     dx = x - st["x_ref"]
     fire_x = jnp.abs(dx) > tx * scale
     dx = jnp.where(fire_x, dx, 0.0)
     x_ref = st["x_ref"] + dx
-    acc_x = st["acc_x"] + dx @ w_i
+    acc_x = st["acc_x"] + mm(dx, w_i)
 
     dh = st["h"] - st["h_ref"]
     fire_h = jnp.abs(dh) > th * scale
     dh = jnp.where(fire_h, dh, 0.0)
     h_ref = st["h_ref"] + dh
-    acc_h = st["acc_h"] + dh @ w_h
+    acc_h = st["acc_h"] + mm(dh, w_h)
 
     gi = _maybe_q(acc_x + b_i, aspec)  # (B, 3H)
     gh = _maybe_q(acc_h + b_h, aspec)
@@ -310,6 +318,7 @@ def delta_classifier_step(
     fv_t: jnp.ndarray,
     config: GRUConfig,
     thetas: Tuple[Tuple[int, int], ...],
+    matmul=None,
 ) -> Tuple[List[Dict[str, jnp.ndarray]], jnp.ndarray]:
     """Streaming ΔGRU step: one frame (B, C) -> (new states, (B, K)).
 
@@ -318,11 +327,12 @@ def delta_classifier_step(
     stay on the grid or the partial sums stop telescoping exactly —
     and it keeps "delta" and "delta-int" in bit-agreement for any
     input, mirroring the integer backend's entry quantization.
+    ``matmul`` threads through to every `delta_gru_cell`.
     """
     new_states = []
     x = quant.fake_quant(fv_t, config.act_spec)
     for layer, st, t in zip(params["gru"], states, thetas):
-        st, x = delta_gru_cell(layer, st, x, config, t)
+        st, x = delta_gru_cell(layer, st, x, config, t, matmul=matmul)
         new_states.append(st)
     return new_states, _fc_logits(params, x, config)
 
@@ -363,6 +373,7 @@ def int_delta_gru_cell(
     x: jnp.ndarray,
     config: GRUConfig,
     thetas: Tuple[int, int],
+    matmul=None,
 ) -> Tuple[Dict[str, jnp.ndarray], jnp.ndarray]:
     """One ΔGRU step on codes: x (B, I) int32 Q6.8 -> (state, h' codes).
 
@@ -370,21 +381,29 @@ def int_delta_gru_cell(
     the frac-15 partial sums live in the persistent int32 accumulators
     (the DeltaKWS per-neuron partial-sum memory) instead of being
     recomputed densely.
+
+    ``matmul`` overrides how a Δ·W contribution is evaluated (default:
+    the saturating-int24 `intgemm` kernel). The fused-tick megakernel
+    passes its gather-compacted sparse product (`repro.kernels.
+    tick_fused`), which multiplies only the firing columns and applies
+    the same final int24 saturation — identical int32 codes, work
+    proportional to the fire count.
     """
     del config  # geometry is carried by the code arrays themselves
     tx, th = thetas
+    mm = intgemm if matmul is None else matmul
 
     dx = x - st["x_ref"]
     fire_x = jnp.abs(dx) > tx
     dx = jnp.where(fire_x, dx, 0)
     x_ref = st["x_ref"] + dx
-    acc_x = st["acc_x"] + intgemm(dx, layer["w_i"])
+    acc_x = st["acc_x"] + mm(dx, layer["w_i"])
 
     dh = st["h"] - st["h_ref"]
     fire_h = jnp.abs(dh) > th
     dh = jnp.where(fire_h, dh, 0)
     h_ref = st["h_ref"] + dh
-    acc_h = st["acc_h"] + intgemm(dh, layer["w_h"])
+    acc_h = st["acc_h"] + mm(dh, layer["w_h"])
 
     gi = quant.clip_act_codes(
         quant.round_shift_even(acc_x + layer["b_i"], _ACC_SHIFT)
@@ -423,12 +442,14 @@ def int_delta_classifier_step(
     fv_t: jnp.ndarray,
     config: GRUConfig,
     thetas: Tuple[Tuple[int, int], ...],
+    matmul=None,
 ) -> Tuple[List[Dict[str, jnp.ndarray]], jnp.ndarray]:
-    """Streaming ΔGRU step on codes: one frame (B, C) -> (states, (B, K))."""
+    """Streaming ΔGRU step on codes: one frame (B, C) -> (states, (B, K)).
+    ``matmul`` threads through to every `int_delta_gru_cell`."""
     new_states = []
     x = fv_t
     for layer, st, t in zip(qparams.gru, states, thetas):
-        st, x = int_delta_gru_cell(layer, st, x, config, t)
+        st, x = int_delta_gru_cell(layer, st, x, config, t, matmul=matmul)
         new_states.append(st)
     return new_states, _int_fc_logits(qparams, x)
 

@@ -1,0 +1,143 @@
+"""Shared dispatch-tier selection for the Pallas kernel layer.
+
+Every kernel in `repro.kernels` ships three equivalent implementations:
+
+  * ``pallas``    — the compiled Mosaic kernel (TPU);
+  * ``interpret`` — the same kernel body run by the Pallas interpreter
+                    (validates kernel logic on CPU CI);
+  * ``reference`` — a pure-jnp formulation, bit-identical by contract
+                    (fastest off-TPU for shapes the interpreter crawls
+                    on).
+
+Before this module each kernel's ``ops.py`` carried its own copy of the
+same three decisions; they are centralized here so `tdc` / `intgemm` /
+`gru` / `fex_fused` / `tick_fused` resolve identically:
+
+  1. `resolve_dispatch` — map ("auto" | explicit tier, legacy
+     ``interpret=`` flag) to a concrete tier for this jax backend.
+  2. `trace_aware_jit` — jit a kernel entry point at the top level but
+     inline it under an outer trace, so a caller's jit (the fused
+     serving tick, a training scan) compiles ONE program with no
+     nested-jit call boundary.
+  3. `force_dispatch` — a thread-local override consulted before
+     everything else. The fused-tick megakernel body
+     (`repro.kernels.tick_fused`) traces the whole serving tick —
+     including classifier backends that themselves call `intgemm` —
+     INSIDE a `pallas_call`; a `pallas_call` cannot nest, so the
+     megakernel activates ``force_dispatch("reference")`` while tracing
+     its body and every nested kernel entry point resolves to its
+     pure-jnp reference (bit-identical by contract, so the megakernel's
+     output is unchanged).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import functools
+import threading
+from typing import Optional
+
+import jax
+
+__all__ = [
+    "DISPATCH_TIERS",
+    "dispatch_override",
+    "force_dispatch",
+    "resolve_dispatch",
+    "trace_aware_jit",
+]
+
+DISPATCH_TIERS = ("pallas", "interpret", "reference")
+
+_local = threading.local()
+
+
+def dispatch_override() -> Optional[str]:
+    """The tier forced by an enclosing `force_dispatch`, or None."""
+    return getattr(_local, "tier", None)
+
+
+@contextlib.contextmanager
+def force_dispatch(tier: str):
+    """Force every kernel dispatch in this thread to ``tier``.
+
+    Overrides BOTH the ``dispatch=`` argument and the legacy
+    ``interpret=`` flag of every kernel entry point resolved inside the
+    context — this is the no-nested-`pallas_call` escape hatch for
+    kernel bodies that trace other kernels' entry points (see module
+    docstring). Thread-local and re-entrant.
+    """
+    if tier not in DISPATCH_TIERS:
+        raise ValueError(
+            f"unknown dispatch tier {tier!r}; expected one of "
+            f"{DISPATCH_TIERS}"
+        )
+    prev = dispatch_override()
+    _local.tier = tier
+    try:
+        yield
+    finally:
+        _local.tier = prev
+
+
+def resolve_dispatch(
+    dispatch: str = "auto",
+    interpret: Optional[bool] = None,
+    *,
+    off_tpu: str = "reference",
+    has_reference: bool = True,
+) -> str:
+    """Resolve ('auto' | tier, legacy flag) to a concrete dispatch tier.
+
+    Precedence: an enclosing `force_dispatch` wins over everything;
+    then the legacy ``interpret=`` flag (True -> "interpret", False ->
+    "pallas"); then an explicit ``dispatch=`` tier; then "auto" picks
+    "pallas" on TPU and ``off_tpu`` elsewhere (each kernel states its
+    own off-TPU default: "reference" where the jnp formulation is the
+    fast path, "interpret" where the interpreter is cheap enough to
+    keep CI exercising the kernel body — `tdc` flips between the two
+    on batch size).
+
+    Kernels without a standalone reference tier (``has_reference=
+    False``: `gru`, `fex_fused`) degrade a forced/explicit "reference"
+    to "interpret" — the interpreter is their bit-identical non-Mosaic
+    evaluation of the same body.
+    """
+    forced = dispatch_override()
+    if forced is not None:
+        return forced if has_reference or forced != "reference" else "interpret"
+    if interpret is not None:  # legacy flag wins when given explicitly
+        return "interpret" if interpret else "pallas"
+    if dispatch != "auto":
+        if dispatch not in DISPATCH_TIERS:
+            raise ValueError(
+                f"unknown dispatch {dispatch!r}; "
+                "expected 'auto', 'pallas', 'interpret' or 'reference'"
+            )
+        if dispatch == "reference" and not has_reference:
+            return "interpret"
+        return dispatch
+    if jax.default_backend() == "tpu":
+        return "pallas"
+    return off_tpu
+
+
+def trace_aware_jit(fn, *, static_argnames=()):
+    """Wrap a kernel entry point: jit at top level, inline under a trace.
+
+    Batch shapes are static under tracing, so dispatch resolves the
+    same way inside an outer jit (e.g. the fused serving tick of
+    `repro.serving.serve_loop` or `KWSPipeline.features`) as at the
+    top level — but when already inside a trace the wrapper calls
+    ``fn`` directly instead of nesting another `jax.jit`, so the
+    caller's program keeps a single jaxpr with no inner call boundary.
+    """
+    jitted = jax.jit(fn, static_argnames=static_argnames)
+
+    @functools.wraps(fn)
+    def call(*args, **kwargs):
+        if jax.core.trace_state_clean():
+            return jitted(*args, **kwargs)
+        return fn(*args, **kwargs)
+
+    return call

@@ -1,37 +1,27 @@
-"""jit'd public wrapper for the fused FEx kernel.
+"""Public wrapper for the fused FEx kernel.
 
-Falls back to interpret mode automatically off-TPU so the same call site
-works in CI (CPU, interpret=True validates the kernel body) and in
-production (TPU, compiled Mosaic kernel).
+Tier selection (pallas on TPU, interpreter off-TPU — no standalone jnp
+reference, the interpreter IS the non-Mosaic evaluation of the same
+body) and the trace-aware jit discipline come from
+`repro.kernels.dispatch`, so the same call site works in CI (CPU,
+interpret validates the kernel body) and in production (TPU, compiled
+Mosaic kernel).
 """
 
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
-import jax
 import jax.numpy as jnp
 
 from repro.core.filters import BiquadCoeffs
+from repro.kernels.dispatch import resolve_dispatch, trace_aware_jit
 from repro.kernels.fex_fused.kernel import fex_fused_pallas
 
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
-@functools.partial(
-    jax.jit, static_argnames=("frame_len", "block_batch", "interpret")
+_fex_fused_call = trace_aware_jit(
+    fex_fused_pallas,
+    static_argnames=("frame_len", "block_batch", "interpret"),
 )
-def _fex_fused_jit(x, coeffs_arr, frame_len, block_batch, interpret):
-    return fex_fused_pallas(
-        x,
-        coeffs_arr,
-        frame_len=frame_len,
-        block_batch=block_batch,
-        interpret=interpret,
-    )
 
 
 def fex_fused(
@@ -46,8 +36,10 @@ def fex_fused(
     Pads the batch up to the block size and trims T to a whole number of
     frames, so any (B, T) is accepted.
     """
-    if interpret is None:
-        interpret = not _on_tpu()
+    path = resolve_dispatch(
+        interpret=interpret, off_tpu="interpret", has_reference=False
+    )
+    interpret = path != "pallas"
     if block_batch is None:
         block_batch = 8 if interpret else 256
     b, t = x.shape
@@ -60,8 +52,8 @@ def fex_fused(
     # channel's a1 ~ -1.9961 rounds to -1.9922 in bf16, pushing the pole
     # to the unit circle and blowing the filter up (the analog
     # equivalent: the FLL bias precision that sets each channel's f0).
-    out = _fex_fused_jit(
-        x, coeffs.stacked(dtype=jnp.float32), frame_len, block_batch,
-        interpret,
+    out = _fex_fused_call(
+        x, coeffs.stacked(dtype=jnp.float32),
+        frame_len=frame_len, block_batch=block_batch, interpret=interpret,
     )
     return out[:b]

@@ -1,22 +1,23 @@
-"""jit'd wrapper: batch-major API, auto interpret off-TPU, batch padding."""
+"""Public wrapper: batch-major API, shared dispatch tiers, batch padding.
+
+Tier selection (pallas on TPU, interpreter off-TPU — this kernel has
+no standalone jnp reference, the interpreter IS its non-Mosaic
+evaluation) and the trace-aware jit discipline come from
+`repro.kernels.dispatch`.
+"""
 
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
-import jax
 import jax.numpy as jnp
 
+from repro.kernels.dispatch import resolve_dispatch, trace_aware_jit
 from repro.kernels.gru.kernel import gru_sequence_pallas
 
-
-@functools.partial(jax.jit, static_argnames=("block_batch", "interpret"))
-def _gru_seq_jit(xs, w, u, b_i, b_h, h0, block_batch, interpret):
-    return gru_sequence_pallas(
-        xs, w, u, b_i, b_h, h0,
-        block_batch=block_batch, interpret=interpret,
-    )
+_gru_seq_call = trace_aware_jit(
+    gru_sequence_pallas, static_argnames=("block_batch", "interpret")
+)
 
 
 def gru_sequence(
@@ -30,8 +31,10 @@ def gru_sequence(
     interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
     """(B, T, I) -> (B, T, H) with weights resident in VMEM."""
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    path = resolve_dispatch(
+        interpret=interpret, off_tpu="interpret", has_reference=False
+    )
+    interpret = path != "pallas"
     if block_batch is None:
         block_batch = 8 if interpret else 128
     b = xs.shape[0]
@@ -44,7 +47,8 @@ def gru_sequence(
             [xs, jnp.zeros((pad,) + xs.shape[1:], xs.dtype)], axis=0
         )
         h0 = jnp.concatenate([h0, jnp.zeros((pad, h), h0.dtype)], axis=0)
-    out = _gru_seq_jit(
-        jnp.moveaxis(xs, 1, 0), w, u, b_i, b_h, h0, block_batch, interpret
+    out = _gru_seq_call(
+        jnp.moveaxis(xs, 1, 0), w, u, b_i, b_h, h0,
+        block_batch=block_batch, interpret=interpret,
     )
     return jnp.moveaxis(out, 0, 1)[:b]

@@ -10,56 +10,42 @@
                     (`intgemm_ref`; fastest off-TPU, bit-identical to
                     the kernel for all in-range inputs).
 
-Dispatch is automatic (pallas on TPU, reference elsewhere) unless
-forced via ``dispatch``; the legacy ``interpret=`` flag is honored.
-
-`intgemm` is trace-aware: inside an outer trace (the fused serving tick
-of `repro.serving.serve_loop`, the integer classifier's `lax.scan`
-drivers) it inlines the chosen implementation instead of nesting
-another `jax.jit`, so the caller's program keeps a single jaxpr.
+Tier selection, the legacy ``interpret=`` flag, the `force_dispatch`
+override, and the trace-aware no-nested-jit call discipline are the
+shared `repro.kernels.dispatch` machinery. The override matters here:
+`intgemm` is traced inside the fused-tick megakernel's body by the
+integer/delta-int classifier backends, where `force_dispatch
+("reference")` reroutes it to `intgemm_ref` (a `pallas_call` cannot
+nest).
 """
 
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
-import jax
 import jax.numpy as jnp
 
+from repro.kernels.dispatch import resolve_dispatch, trace_aware_jit
 from repro.kernels.intgemm.kernel import intgemm_pallas
 from repro.kernels.intgemm.ref import intgemm_ref
 
-
-@functools.partial(
-    jax.jit, static_argnames=("block_m", "block_n", "block_k", "interpret")
+_intgemm_call = trace_aware_jit(
+    intgemm_pallas,
+    static_argnames=("block_m", "block_n", "block_k", "interpret"),
 )
-def _intgemm_jit(x, w, block_m, block_n, block_k, interpret):
-    return intgemm_pallas(
-        x, w,
-        block_m=block_m, block_n=block_n, block_k=block_k,
-        interpret=interpret,
-    )
 
 
 def resolve_intgemm_dispatch(
     dispatch: str = "auto",
     interpret: Optional[bool] = None,
 ) -> str:
-    """Resolve 'auto' to a concrete path for this backend."""
-    if interpret is not None:  # legacy flag wins when given explicitly
-        return "interpret" if interpret else "pallas"
-    if dispatch != "auto":
-        if dispatch not in ("pallas", "interpret", "reference"):
-            raise ValueError(
-                f"unknown dispatch {dispatch!r}; "
-                "expected 'auto', 'pallas', 'interpret' or 'reference'"
-            )
-        return dispatch
-    # Off-TPU the interpreter is per-element slow and the jnp reference
-    # is bit-identical by contract (tests/test_kernels.py), so serving
-    # hot paths (the integer classifier tick) auto-select the reference.
-    return "pallas" if jax.default_backend() == "tpu" else "reference"
+    """Resolve 'auto' to a concrete path for this backend.
+
+    Off-TPU the interpreter is per-element slow and the jnp reference
+    is bit-identical by contract (tests/test_kernels.py), so serving
+    hot paths (the integer classifier tick) auto-select the reference.
+    """
+    return resolve_dispatch(dispatch, interpret, off_tpu="reference")
 
 
 def intgemm(
@@ -81,16 +67,9 @@ def intgemm(
     pm, pk, pn = (-m) % block_m, (-k) % block_k, (-n) % block_n
     xp = jnp.pad(x.astype(jnp.int32), ((0, pm), (0, pk)))
     wp = jnp.pad(w.astype(jnp.int32), ((0, pk), (0, pn)))
-    if jax.core.trace_state_clean():
-        out = _intgemm_jit(
-            xp, wp, block_m, block_n, block_k, run_interpret
-        )
-    else:
-        # already under an outer trace: inline the kernel call so the
-        # caller's jit compiles one program (no nested-jit boundary)
-        out = intgemm_pallas(
-            xp, wp,
-            block_m=block_m, block_n=block_n, block_k=block_k,
-            interpret=run_interpret,
-        )
+    out = _intgemm_call(
+        xp, wp,
+        block_m=block_m, block_n=block_n, block_k=block_k,
+        interpret=run_interpret,
+    )
     return out[:m, :n]

@@ -9,43 +9,31 @@
                     `repro.core.tdfex.sro_tdc` (fastest off-TPU, and the
                     fallback for shapes the kernel does not tile well).
 
-Dispatch is automatic (backend + batch shape) unless forced via the
-``dispatch`` argument; the legacy ``interpret=`` flag is still honored.
-
-`tdc_counts` is trace-aware: batch shapes are static under tracing, so
-dispatch resolves the same way inside an outer jit (e.g. the fused
-serving tick of `repro.serving.serve_loop` or `KWSPipeline.features`)
-as at the top level — but when already inside a trace it inlines the
-kernel call instead of nesting another `jax.jit`, so the caller's
-program keeps a single jaxpr with no inner call boundary.
+Tier selection, the legacy ``interpret=`` flag, the `force_dispatch`
+override, and the trace-aware no-nested-jit call discipline are the
+shared `repro.kernels.dispatch` machinery; this kernel's only local
+policy is the off-TPU auto split — small batches run the interpreter
+(cheap, keeps CI validating the kernel logic), large batches the
+vectorized jnp reference (the interpreter is per-element slow).
 """
 
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
-import jax
 import jax.numpy as jnp
 
 from repro.core.tdfex import TDFExConfig, TDFExState, sro_tdc
+from repro.kernels.dispatch import resolve_dispatch, trace_aware_jit
 from repro.kernels.tdc.kernel import tdc_pallas
 
-
-@functools.partial(
-    jax.jit,
+_tdc_call = trace_aware_jit(
+    tdc_pallas,
     static_argnames=(
         "samples_per_frame", "os", "f_tdc", "n_phases",
         "block_batch", "interpret",
     ),
 )
-def _tdc_jit(u, f0_eff, k_eff, samples_per_frame, os, f_tdc, n_phases,
-             block_batch, interpret):
-    return tdc_pallas(
-        u, f0_eff, k_eff,
-        samples_per_frame=samples_per_frame, os=os, f_tdc=f_tdc,
-        n_phases=n_phases, block_batch=block_batch, interpret=interpret,
-    )
 
 
 def resolve_tdc_dispatch(
@@ -54,22 +42,10 @@ def resolve_tdc_dispatch(
     interpret: Optional[bool] = None,
 ) -> str:
     """Resolve 'auto' to a concrete path for this backend + batch shape."""
-    if interpret is not None:  # legacy flag wins when given explicitly
-        return "interpret" if interpret else "pallas"
-    if dispatch != "auto":
-        if dispatch not in ("pallas", "interpret", "reference"):
-            raise ValueError(
-                f"unknown dispatch {dispatch!r}; "
-                "expected 'auto', 'pallas', 'interpret' or 'reference'"
-            )
-        return dispatch
-    if jax.default_backend() == "tpu":
-        return "pallas"
-    # Off-TPU, small batches run the kernel body under the Pallas
-    # interpreter (cheap, and it keeps CI validating the kernel logic);
-    # the interpreter is per-element slow, so large batches switch to
-    # the vectorized jnp reference for throughput.
-    return "interpret" if batch <= 8 else "reference"
+    return resolve_dispatch(
+        dispatch, interpret,
+        off_tpu="interpret" if batch <= 8 else "reference",
+    )
 
 
 def tdc_counts(
@@ -104,19 +80,11 @@ def tdc_counts(
         u = jnp.concatenate(
             [u, jnp.zeros((pad,) + u.shape[1:], u.dtype)], axis=0
         )
-    if jax.core.trace_state_clean():
-        out = _tdc_jit(
-            u, f0_eff, k_eff, samples_per_frame, cfg.tdc_oversample,
-            cfg.f_tdc, cfg.n_phases, block_batch, run_interpret,
-        )
-    else:
-        # already under an outer trace: inline the kernel call so the
-        # caller's jit compiles one program (no nested-jit boundary)
-        out = tdc_pallas(
-            u, f0_eff, k_eff,
-            samples_per_frame=samples_per_frame,
-            os=cfg.tdc_oversample, f_tdc=cfg.f_tdc,
-            n_phases=cfg.n_phases, block_batch=block_batch,
-            interpret=run_interpret,
-        )
+    out = _tdc_call(
+        u, f0_eff, k_eff,
+        samples_per_frame=samples_per_frame,
+        os=cfg.tdc_oversample, f_tdc=cfg.f_tdc,
+        n_phases=cfg.n_phases, block_batch=block_batch,
+        interpret=run_interpret,
+    )
     return out[:b]

@@ -1,0 +1,108 @@
+"""Public entry point for the fused serving-tick megakernel.
+
+`tick_fused` picks one of three equivalent implementations per call,
+through the shared `repro.kernels.dispatch` machinery (same convention
+as `tdc` / `intgemm`):
+
+  * ``pallas``    — the compiled Mosaic megakernel (TPU): the whole
+                    tick as ONE `pallas_call` over stream blocks;
+  * ``interpret`` — the same kernel body under the Pallas interpreter
+                    (validates the megakernel — block slicing, operand
+                    encoding, the ΔGRU gather path — on CPU CI);
+  * ``reference`` — `tick_reference` directly: the plain fused-XLA
+                    tick, exactly the pre-kernel server program.
+
+Sharding: the stream-block grid axis maps 1:1 onto shard-local slabs.
+GSPMD cannot partition a `pallas_call`, so with a ``mesh=`` the kernel
+call is wrapped in a `shard_map` over the ``("stream",)`` axis — each
+device runs ONE kernel on its own slab (slots are computationally
+independent; there is no collective anywhere in the tick), so the SPMD
+program per device is still a single kernel.
+
+The expected call site is inside the serving layer's outer jit
+(`repro.serving.serve_loop._fused_tick` with ``tick_impl=
+"fused-pallas"|"fused-interpret"``), where the kernel call inlines
+into the tick's single jaxpr; top-level calls (the identity tests)
+simply trace eagerly.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.kernels.dispatch import resolve_dispatch
+from repro.kernels.tick_fused.kernel import tick_fused_pallas
+from repro.kernels.tick_fused.ref import tick_reference
+
+
+def resolve_tick_dispatch(
+    dispatch: str = "auto",
+    interpret: Optional[bool] = None,
+) -> str:
+    """Resolve 'auto' to a concrete tier for this backend.
+
+    Off-TPU the interpreter re-traces the whole tick per stream block
+    (correct but slow), so 'auto' picks the plain fused-XLA reference —
+    the serving layer's ``tick_impl="auto"`` maps to the same choice.
+    """
+    return resolve_dispatch(dispatch, interpret, off_tpu="reference")
+
+
+def tick_fused(
+    pipeline,
+    raw_audio: bool,
+    params,
+    state: Tuple[Any, Any, jnp.ndarray, Any],
+    inp: jnp.ndarray,
+    mask: jnp.ndarray,
+    frontend_state,
+    smoothing,
+    *,
+    dispatch: str = "auto",
+    interpret: Optional[bool] = None,
+    block_streams: Optional[int] = None,
+    mesh=None,
+) -> Tuple[Tuple[Any, Any, jnp.ndarray, Any], jnp.ndarray, jnp.ndarray]:
+    """One fused serving tick; state is the ``(gru, carry, scores, det)``
+    tuple of `tick_reference`. Returns ``(new_state, scores, top)``,
+    bit-identical across all three tiers for every classifier backend.
+    """
+    state = (tuple(state[0]), state[1], state[2], state[3])
+    path = resolve_tick_dispatch(dispatch, interpret)
+    if path == "reference":
+        return tick_reference(
+            pipeline, raw_audio, params, state, inp, mask,
+            frontend_state, smoothing,
+        )
+    run_interpret = path == "interpret"
+    if block_streams is None:
+        block_streams = 8 if run_interpret else 128
+    call = functools.partial(
+        tick_fused_pallas, pipeline, raw_audio,
+        block_streams=block_streams, interpret=run_interpret,
+    )
+    if mesh is None:
+        return call(params, state, inp, mask, frontend_state, smoothing)
+    # stream axis sharded over the mesh: GSPMD cannot partition a
+    # pallas_call, so run one kernel per shard-local slab
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.sharding import STREAM_AXIS
+
+    slab = P(STREAM_AXIS)
+    rep = P()
+    fn = shard_map(
+        lambda p, st, x, m, fs, sm: call(p, st, x, m, fs, sm),
+        mesh=mesh,
+        in_specs=(rep, slab, slab, slab, rep, rep),
+        out_specs=(slab, slab, slab),
+        check_rep=False,
+    )
+    return fn(
+        params, state, inp, mask, frontend_state,
+        jnp.asarray(smoothing, jnp.float32),
+    )

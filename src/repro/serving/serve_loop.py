@@ -72,7 +72,7 @@ import numpy as np
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
-from repro.core.frontend import masked_select
+from repro.kernels.tick_fused import tick_fused, tick_reference
 from repro.serving import cascade as cascade_lib
 
 from repro.distributed.sharding import (
@@ -261,60 +261,54 @@ class StreamState:
     scores: Optional[np.ndarray] = None  # smoothed class scores
 
 
+# tick_impl -> the kernel layer's dispatch tier (ISSUE: the serving API
+# speaks deployment names, the kernel layer speaks tiers)
+_TICK_IMPLS = ("auto", "xla", "fused-pallas", "fused-interpret")
+_TICK_DISPATCH = {
+    "xla": "xla", "fused-pallas": "pallas", "fused-interpret": "interpret",
+}
+
+
 def _fused_tick(pipeline, raw_audio, params, state: ServerState, inp,
-                mask, frontend_state, smoothing):
+                mask, frontend_state, smoothing, *, tick_impl="xla",
+                mesh=None):
     """One fully fused serving tick, traced as a single device program.
 
-    inp is a raw-audio slab (N, chunk_samples) when ``raw_audio`` else an
-    FV_Norm slab (N, C); mask (N,) bool marks slots that submitted this
-    tick. Frontend carry, GRU states, and smoothed scores advance ONLY
-    under the mask — an idle slot's slice of every buffer is returned
-    bit-identical (jnp.where keeps the old value), so a stream skipping
-    a tick resumes from its own contiguous state.
+    The tick MATH — frontend feature frame, stage-1 cascade wake gate,
+    classifier step, softmax, smoothing, masked state advance — lives
+    in `repro.kernels.tick_fused.tick_reference` (moved there verbatim
+    so the megakernel can re-run it per stream block); this wrapper
+    owns only the `ServerState` packing and the implementation choice:
 
-    With a cascade (`pipeline.config.cascade`, a static branch) the
-    stage-1 detector scores the feature frame and its gate narrows the
-    mask the classifier/scores advance under: a submitted-but-gated
-    stream's GRU state holds frozen (and its posterior optionally
-    decays toward silence), while the frontend carry and the detector
-    state still advance under the plain submitted mask — the stage-1
-    gate is always-on and consumes every frame, only the classifier
-    sleeps. An always-open gate makes ``wake == mask`` elementwise, so
-    the tick is bit-identical to the non-cascaded program.
+      tick_impl="xla"             one fused XLA program (the default
+                                  off-TPU; exactly the pre-kernel tick)
+      tick_impl="fused-pallas"    the whole tick as ONE `pallas_call`
+                                  over stream blocks with the ΔGRU
+                                  gather path (TPU)
+      tick_impl="fused-interpret" the same megakernel body under the
+                                  Pallas interpreter (CPU-testable)
+
+    All three are bit-identical for every classifier backend (tests/
+    test_tick_fused.py). ``mesh`` threads the stream mesh to the kernel
+    tiers, whose `pallas_call` GSPMD cannot partition — the kernel
+    wraps itself in a `shard_map` so each device still runs one kernel
+    on its shard-local slab.
     """
-    if raw_audio:
-        new_carry, fv = pipeline.streaming_features_apply(
-            state.carry, inp, frontend_state
+    state4 = (state.gru, state.carry, state.scores, state.det)
+    if tick_impl == "xla":
+        (gru, carry, scores, det), out_scores, top = tick_reference(
+            pipeline, raw_audio, params, state4, inp, mask,
+            frontend_state, smoothing,
         )
-        carry = masked_select(mask, new_carry, state.carry)
     else:
-        carry = state.carry
-        fv = inp
-    casc = pipeline.config.cascade
-    if casc is not None:
-        score = cascade_lib.detector_scores(fv, casc)
-        new_det, gate = cascade_lib.gate_step(state.det, score, casc)
-        det = masked_select(mask, new_det, state.det)
-        wake = jnp.logical_and(mask, gate)
-    else:
-        det = state.det
-        wake = mask
-    new_gru, logits = pipeline.streaming_logits_apply(
-        params, list(state.gru), fv
-    )
-    gru = tuple(masked_select(wake, tuple(new_gru), state.gru))
-    probs = jax.nn.softmax(logits, axis=-1)
-    smoothed = smoothing * state.scores + (1.0 - smoothing) * probs
-    scores = masked_select(wake, smoothed, state.scores)
-    if casc is not None and casc.score_decay != 1.0:
-        # submitted but gated: decay the stale posterior toward zero
-        # ("silence") while the classifier sleeps
-        gated = jnp.logical_and(mask, jnp.logical_not(wake))
-        scores = masked_select(gated, casc.score_decay * state.scores, scores)
-    top = jnp.argmax(scores, axis=-1)
+        (gru, carry, scores, det), out_scores, top = tick_fused(
+            pipeline, raw_audio, params, state4, inp, mask,
+            frontend_state, smoothing,
+            dispatch=_TICK_DISPATCH[tick_impl], mesh=mesh,
+        )
     return (
         ServerState(gru=gru, carry=carry, scores=scores, det=det),
-        scores,
+        out_scores,
         top,
     )
 
@@ -363,13 +357,39 @@ class StreamingKWSServer:
     one SPMD program per tick, bit-identical to the single-device
     server. ``devices=None`` with a single visible device (and a
     size-1 mesh) falls back to the pre-sharding single-device path.
+
+    Tick implementation: ``tick_impl=`` selects how the per-tick device
+    program is built — ``"xla"`` (one fused XLA program, the historical
+    tick), ``"fused-pallas"`` (the whole tick as ONE Pallas megakernel
+    over stream blocks with the ΔGRU gather path — temporal sparsity
+    becomes wall-clock speed), ``"fused-interpret"`` (the megakernel
+    under the Pallas interpreter, for CPU CI), or ``"auto"`` (default:
+    fused-pallas on TPU, xla elsewhere). All choices are bit-identical
+    for every backend; the resolved choice and its kernel dispatch tier
+    are exposed as `srv.tick_impl` / `srv.tick_dispatch`.
     """
 
     def __init__(self, pipeline, params, max_streams: int = 256,
                  smoothing: float = 0.7, state=None, mesh=None,
-                 devices: Optional[int] = None):
+                 devices: Optional[int] = None, tick_impl: str = "auto"):
         if mesh is not None and devices is not None:
             raise ValueError("pass mesh= or devices=, not both")
+        if tick_impl not in _TICK_IMPLS:
+            raise ValueError(
+                f"tick_impl must be one of {_TICK_IMPLS}; got "
+                f"{tick_impl!r}"
+            )
+        if tick_impl == "auto":
+            # the megakernel is only a wall-clock win compiled on TPU;
+            # off-TPU the fused-XLA tick is both fastest and the
+            # bit-identity reference
+            tick_impl = (
+                "fused-pallas" if jax.default_backend() == "tpu" else "xla"
+            )
+        self.tick_impl = tick_impl
+        # the kernel dispatch tier the ticks will actually run
+        # ("xla" = no pallas_call at all) — benchmarks record this
+        self.tick_dispatch = _TICK_DISPATCH[tick_impl]
         if mesh is None and devices is not None:
             # stream_mesh is the single count-vs-visible validator; the
             # size-1 fallback below then strips a one-device mesh
@@ -490,18 +510,23 @@ class StreamingKWSServer:
                 in_shardings=(st_sh, scalar),
                 out_shardings=st_sh,
             )
+        impl_kw = dict(tick_impl=self.tick_impl, mesh=mesh)
         self._tick_audio = jax.jit(
-            functools.partial(_fused_tick, pipeline, True), **tick_kw
+            functools.partial(_fused_tick, pipeline, True, **impl_kw),
+            **tick_kw,
         )
         self._tick_fv = jax.jit(
-            functools.partial(_fused_tick, pipeline, False), **tick_kw
+            functools.partial(_fused_tick, pipeline, False, **impl_kw),
+            **tick_kw,
         )
         self._reset = jax.jit(_reset_slot, **reset_kw)
         self._run_audio = jax.jit(
-            functools.partial(_run_scan, pipeline, True), **run_kw
+            functools.partial(_run_scan, pipeline, True, **impl_kw),
+            **run_kw,
         )
         self._run_fv = jax.jit(
-            functools.partial(_run_scan, pipeline, False), **run_kw
+            functools.partial(_run_scan, pipeline, False, **impl_kw),
+            **run_kw,
         )
         # Device-side ownership copy for the async path: the fused
         # tick's (scores, top) outputs can alias the new ServerState's
@@ -830,14 +855,18 @@ class StreamingKWSServer:
 
 
 def _run_scan(pipeline, raw_audio, params, state: ServerState, slab, mask,
-              frontend_state, smoothing):
-    """lax.scan of the fused tick over (n_ticks, N, S|C) buffered input."""
+              frontend_state, smoothing, *, tick_impl="xla", mesh=None):
+    """lax.scan of the fused tick over (n_ticks, N, S|C) buffered input.
+
+    The scan body is the very `_fused_tick` the live path jits — same
+    tick_impl, so a fused-pallas server replays its megakernel inside
+    the scan too (one kernel launch per scanned tick)."""
 
     def body(st, xs):
         x_t, m_t = xs
         st, scores, top = _fused_tick(
             pipeline, raw_audio, params, st, x_t, m_t, frontend_state,
-            smoothing,
+            smoothing, tick_impl=tick_impl, mesh=mesh,
         )
         return st, (scores, top)
 
