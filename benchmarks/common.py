@@ -314,6 +314,90 @@ def percentile_stats(latencies_s) -> Dict[str, float]:
     }
 
 
+BENCH_CHURN_FIELDS = """\
+Field reference for ``BENCH_churn.json`` (written by
+benchmarks/churn_load.py — elastic serving under open/close churn,
+live autoscaler resizes, and injected shard loss):
+
+  backend          jax backend the run executed on ("cpu"/"tpu"/...)
+  classifier       registered ClassifierBackend the traffic was served
+                   with (--classifier)
+  devices_initial  device count the server was built on (--devices)
+  devices_final    device count at exit — smaller than initial exactly
+                   when --shard-loss shrank the mesh mid-run
+  seed             traffic RNG seed (--seed)
+  quick            True when the quick (CI-sized) schedule ran
+  policy           the AutoscalePolicy the run was driven by:
+                   min_streams / max_streams (capacity clamp),
+                   grow_at / shrink_at (occupancy watermarks),
+                   hysteresis_ticks (consecutive breaches before an
+                   act), cooldown_ticks (dead time after an act), and
+                   factor (the grow/shrink multiple)
+  phases[]         one entry per schedule phase (ramp / peak / drain):
+    phase            phase name
+    ticks            ticks driven in the phase
+    p50_ms/p99_ms/mean_ms
+                     steady-state per-tick `step_batch` wall latency —
+                     compile ticks (the first tick overall and the
+                     first tick after any capacity change, which trace
+                     a fresh program at the new slot width) are
+                     EXCLUDED here and recorded under
+                     resize.post_change_compile_ms instead
+    ticks_per_s      1e3 / mean_ms (blocking per-call cadence)
+    mean_active      mean open-stream count over the phase's ticks
+    capacity_end     server max_streams when the phase ended
+    opens/closes     streams opened / closed during the phase
+    rejections       open_stream calls refused at capacity (each one
+                     also fed the autoscaler's note_rejection — the
+                     immediate grow signal)
+  resize           the elasticity trace:
+    events[]         the Autoscaler event log, one entry per capacity
+                     change: {step, action ("grow"/"shrink"), from, to}
+    count            len(events)
+    pause_ms[]       in-band wall time of each autoscaler-triggered
+                     resize() call (state relay + re-placement; the
+                     serving pause the tick loop actually felt)
+    max_pause_ms     max(pause_ms), null when no resize fired
+    post_change_compile_ms[]
+                     wall time of each excluded compile tick (first
+                     tick at a new slot width, plus the first tick
+                     after shard-loss recovery, which rebuilds the
+                     jitted programs on the shrunken mesh)
+  shard_loss       null without --shard-loss, else the injected-loss
+                   record:
+    step               global tick index the loss was injected at
+    lost_shard         mesh index of the lost shard
+    recovery_ms        wall time of recover_shard_loss (host state
+                       relay + mesh rebuild + program recompile +
+                       reopening the lost streams)
+    reopened           streams that lived on the lost shard, reopened
+                       (same ids) on fresh zeroed slots
+    survivors          streams on healthy shards
+    survivors_checked  survivors bit-verified by the bench
+    healthy_bit_unchanged
+                       True when every survivor's per-slot state was
+                       bitwise identical through the move (the
+                       recovery contract, re-checked on the bench's
+                       own traffic; gates slo.elastic_ok)
+    n_devices_after / max_streams_after
+                       mesh and capacity after recovery (capacity is
+                       rounded UP to whole blocks of the surviving
+                       device count)
+  totals           run-wide counters: ticks, opens, closes, arrivals
+                   (offered opens, accepted + rejected), rejections,
+                   stream_frames (sum of active streams over ticks),
+                   wall_s, stream_frames_per_s
+  slo              the churn SLO gate ("ok" bool, and the per-clause
+                   p99_ok / rejection_ok / elastic_ok): steady-state
+                   PEAK-phase p99 <= the 16 ms tick budget, rejection
+                   rate (rejections / arrivals) <= 10%, and the
+                   elasticity smoke — the autoscaler grew during ramp
+                   AND shrank during drain, and (when injected) shard
+                   loss left every healthy stream bit-unchanged.
+                   `--fail-on-slo` exits non-zero when violated
+"""
+
+
 def timed(name):
     class _T:
         def __enter__(self):

@@ -19,7 +19,7 @@ bit-identically, fewer host round-trips.
   PYTHONPATH=src python examples/serve_streaming.py [--streams 32]
       [--frontend software] [--classifier qat|integer]
       [--cascade [--wake-threshold 0.1]] [--offline]
-      [--pipelined [--window 4]]
+      [--pipelined [--window 4]] [--grow 64]
 """
 
 import argparse
@@ -85,6 +85,13 @@ def main():
                     help="ticks coalesced into one scan dispatch by "
                          "--pipelined (the throughput/latency knob; "
                          "1 = one fused tick per dispatch)")
+    ap.add_argument("--grow", type=int, default=None,
+                    help="elastic-serving demo: live-resize the server "
+                         "to this many slots halfway through the run "
+                         "(must be a multiple of the device count; the "
+                         "open streams' state moves bitwise, so the "
+                         "score trajectories are unaffected). Only in "
+                         "the live blocking mode")
     ap.add_argument("--devices", type=int, default=None,
                     help="shard the stream-slot axis over the first N "
                          "visible devices (('stream',) mesh; default: "
@@ -179,6 +186,13 @@ def main():
             detections[sid] = int(tops[slot])
     else:
         for t in range(n_frames):
+            if args.grow is not None and t == n_frames // 2:
+                # live grow: the ServerState pytree is re-laid onto the
+                # larger slot axis bitwise, open streams keep serving
+                srv.resize(args.grow)
+                print(f"  [tick {t}] resized live to {srv.max_streams} "
+                      f"slots ({len(srv.active)} open streams moved "
+                      f"bitwise)")
             chunk = {sid: audio[sid, t * hop:(t + 1) * hop]
                      for sid in range(args.streams)}
             out = srv.step(chunk)

@@ -44,7 +44,11 @@ class CheckpointManager:
         self._pending = None
 
     def maybe_save(self, step: int, tree: Pytree):
-        if step % self.policy.every_steps:
+        # step 0 is the untrained init: `0 % every_steps == 0` used to
+        # save it, burning a `keep` slot and making restore_latest's
+        # answer after an early crash a checkpoint with zero training
+        # in it. The first real save is at `every_steps`.
+        if step == 0 or step % self.policy.every_steps:
             return
         self.wait()
         self._pending = ckpt.save_checkpoint(
@@ -97,17 +101,35 @@ class StragglerEvent:
 
 
 class StragglerMonitor:
+    """Per-step duration tracking with an EMA baseline.
+
+    ``warmup`` steps (default 1) are discarded entirely before the EMA
+    is seeded: step 0 of any jitted loop includes compilation, so
+    seeding the baseline from it poisons the EMA ~100x high and real
+    stragglers are never flagged (a 2x-slow step against a 100x-high
+    baseline looks fast). The EMA seeds from the first post-warmup
+    duration instead.
+    """
+
     def __init__(self, threshold: float = 2.0, budget: int = 3,
-                 ema_alpha: float = 0.1):
+                 ema_alpha: float = 0.1, warmup: int = 1):
+        if warmup < 0:
+            raise ValueError(f"warmup must be >= 0, got {warmup}")
         self.threshold = threshold
         self.budget = budget
         self.alpha = ema_alpha
+        self.warmup = warmup
+        self._seen = 0
         self.ema: Optional[float] = None
         self.consecutive = 0
         self.events: List[StragglerEvent] = []
 
     def record(self, step: int, duration: float) -> bool:
         """Returns True when the eviction/re-mesh budget is exhausted."""
+        if self._seen < self.warmup:
+            # compilation / cold-cache steps: not data, not baseline
+            self._seen += 1
+            return False
         if self.ema is None:
             self.ema = duration
             return False

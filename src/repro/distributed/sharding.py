@@ -35,6 +35,7 @@ __all__ = [
     "stream_mesh",
     "stream_shardings",
     "replicated_shardings",
+    "surviving_devices",
 ]
 
 
@@ -237,6 +238,20 @@ def stream_mesh(
     if hasattr(jax, "make_mesh") and devs == list(jax.devices()):
         return jax.make_mesh((len(devs),), (STREAM_AXIS,))
     return Mesh(np.asarray(devs), (STREAM_AXIS,))
+
+
+def surviving_devices(mesh: Mesh, lost_index: int) -> list:
+    """Devices of a 1-D stream mesh minus the lost shard's device, in
+    mesh order — the pool a shard-loss recovery rebuilds its (smaller)
+    mesh from (`StreamingKWSServer.recover_shard_loss` hands this to
+    `ElasticMeshManager`, whose power-of-two shrink takes a prefix)."""
+    devs = list(np.ravel(mesh.devices))
+    if not 0 <= lost_index < len(devs):
+        raise ValueError(
+            f"lost_index {lost_index} outside mesh of {len(devs)} "
+            "device(s)"
+        )
+    return [d for i, d in enumerate(devs) if i != lost_index]
 
 
 def stream_shardings(tree: Any, mesh: Mesh):

@@ -188,6 +188,29 @@ class PipelinedIngress:
         dispatch)."""
         if self._staged:
             raise RuntimeError("stage() called again before commit()")
+        n = self.server.max_streams
+        if n != self._slabs[0].shape[1]:
+            # The server was resized (autoscaler / shard-loss
+            # recovery): the preallocated buffers are the wrong
+            # capacity. Reallocating is only safe with the pipeline
+            # empty — in-flight dispatches and half-filled windows
+            # still hold old-capacity slabs — so callers drain()
+            # around a resize and the next stage() picks up the new
+            # capacity here.
+            if self._fifo or self._fill:
+                raise RuntimeError(
+                    "server capacity changed mid-pipeline: drain() "
+                    "the ingress before staging into the resized "
+                    "server"
+                )
+            self._slabs = [
+                np.zeros((self.window, n, self.dim), np.float32)
+                for _ in range(self.depth)
+            ]
+            self._masks = [
+                np.zeros((self.window, n), bool)
+                for _ in range(self.depth)
+            ]
         i = self._cursor
         if self._fill == 0:
             # about to write row 0 of buffer i: the dispatch that

@@ -86,6 +86,7 @@ from repro.distributed.sharding import (
     replicated_shardings,
     stream_mesh,
     stream_shardings,
+    surviving_devices,
 )
 from repro.models.registry import get_backbone
 from repro.serving.autoscale import StreamRouter
@@ -473,10 +474,27 @@ class StreamingKWSServer:
         # to the lowest-free-slot order of the pre-sharding free list
         # when n_shards == 1)
         self.router = StreamRouter(max_streams, self.n_devices)
-        # One compiled program per input kind; pipeline is closed over
-        # (static), state buffers are donated. On a mesh every jit gets
-        # explicit in/out shardings so each lowers to one SPMD program
-        # over the ("stream",) axis with the state donated in place.
+        self._compile_programs()
+
+    def _compile_programs(self):
+        """(Re)build the jitted device programs for the current mesh.
+
+        One compiled program per input kind; pipeline is closed over
+        (static), state buffers are donated. On a mesh every jit gets
+        explicit in/out shardings so each lowers to one SPMD program
+        over the ("stream",) axis with the state donated in place.
+
+        Called at construction and again only when the MESH changes
+        (`recover_shard_loss`): the in/out NamedShardings name the mesh
+        object, so a new mesh needs new jit wrappers. A capacity
+        `resize` on an unchanged mesh deliberately does NOT come here —
+        NamedShardings are shape-agnostic and `ServerState`'s pytree
+        structure is capacity-independent, so the existing wrappers
+        simply retrace at the new slot-axis shape (jax's own shape-
+        keyed cache) and toggling between capacities reuses already-
+        compiled programs instead of rebuilding them every resize.
+        """
+        mesh, pipeline = self.mesh, self.pipeline
         if mesh is None:
             jit_kw = dict(donate_argnums=(1,))
             tick_kw = run_kw = jit_kw
@@ -648,6 +666,209 @@ class StreamingKWSServer:
             raise ValueError(f"stream {stream_id} not open")
         slot = self.active.pop(stream_id)
         self.router.release(slot)
+
+    # ---- elastic capacity: live resize & shard-loss recovery ----
+
+    def _host_state(self) -> ServerState:
+        """Owned host copies of every state leaf. `np.array` both
+        forces the copy (a zero-copy view would alias buffers the next
+        tick donates) and blocks until any in-flight tick that writes
+        them has executed — a resize never tears a tick."""
+        return jax.tree.map(lambda t: np.array(t), self.state)
+
+    def _relay_state(self, host_state: ServerState, new_max: int,
+                     src, dst) -> ServerState:
+        """Re-lay host state onto a new capacity: per-leaf zeros at
+        `new_max` slots with old rows `src` copied BITWISE to new rows
+        `dst` (numpy fancy indexing — no arithmetic touches the data,
+        which is what makes survivors array-equal, not just close, in
+        every dtype: float32 scores, int32 Q6.8 codes, bool latches,
+        ΔGRU accumulators)."""
+        src = np.asarray(src, np.int64)
+        dst = np.asarray(dst, np.int64)
+
+        def relay(leaf):
+            out = np.zeros((new_max,) + leaf.shape[1:], leaf.dtype)
+            out[dst] = leaf[src]
+            return out
+
+        return jax.tree.map(relay, host_state)
+
+    def _place_state(self, host_state: ServerState) -> ServerState:
+        """Put a host-side state onto the device(s) in the server's
+        canonical layout (slot axis block-sharded over the mesh)."""
+        if self.mesh is None:
+            return jax.device_put(host_state)
+        return jax.device_put(
+            host_state, stream_shardings(host_state, self.mesh)
+        )
+
+    def resize(self, new_max_streams: int) -> None:
+        """Grow or shrink the stream-slot capacity live.
+
+        Every `ServerState` leaf is re-laid onto the new capacity:
+        open streams' per-slot slices are copied bitwise (host-side
+        fancy indexing, then `device_put` back onto the ``("stream",)``
+        block layout), stream ids keep serving through the move, and
+        the `StreamRouter` re-places the survivors in ascending
+        old-slot order (`StreamRouter.remap` — deterministic, so the
+        new placement is balanced and oracle-predictable). Surviving
+        streams are BIT-identical to an un-resized server afterwards —
+        all five classifier backends, cascaded detector state, ΔGRU
+        counters, async handles in flight (handles own their copies)
+        — proven in tests/test_serve_sharded.py.
+
+        The mesh is unchanged, so no device program is rebuilt; the
+        existing jits retrace at the new slot-axis shape and previously
+        compiled capacities are reused from jax's cache (grow then
+        shrink back costs zero new compiles).
+
+        The new capacity must divide over the mesh (whole per-shard
+        blocks) and hold every open stream; shrinking below the open
+        count raises before any state moves. Callers holding a
+        `PipelinedIngress` must `drain()` it around a resize — its
+        staged slabs are capacity-shaped (it reallocates on next
+        `stage()`; see `repro.serving.ingress`).
+        """
+        if new_max_streams < 1:
+            raise ValueError(
+                f"new_max_streams must be >= 1, got {new_max_streams}"
+            )
+        if new_max_streams % self.n_devices != 0:
+            raise ValueError(
+                f"new_max_streams={new_max_streams} must divide over "
+                f"{self.n_devices} devices"
+            )
+        if len(self.active) > new_max_streams:
+            raise RuntimeError(
+                f"cannot shrink to {new_max_streams} slots with "
+                f"{len(self.active)} stream(s) open"
+            )
+        if new_max_streams == self.max_streams:
+            return
+        occupied = sorted(self.active.values())
+        router, mapping = StreamRouter.remap(
+            occupied, new_max_streams, self.n_devices
+        )
+        host = self._host_state()
+        new_host = self._relay_state(
+            host, new_max_streams, occupied,
+            [mapping[s] for s in occupied],
+        )
+        self.state = self._place_state(new_host)
+        self.active = {
+            sid: mapping[slot] for sid, slot in self.active.items()
+        }
+        self.router = router
+        self.max_streams = new_max_streams
+
+    def recover_shard_loss(self, lost_shard: int) -> Dict[str, Any]:
+        """Shrink-reshard after losing one shard's device.
+
+        The recovery control flow of `repro.distributed.fault_tolerance`
+        wired into serving: the lost device's slot block is gone, so
+
+          1. every OTHER shard's per-slot state is gathered to host
+             (bitwise — healthy streams must come out unchanged),
+          2. `ElasticMeshManager` rebuilds a smaller ``("stream",)``
+             mesh from the surviving devices (power-of-two shrink, as
+             for the training mesh; one survivor -> the single-device
+             fallback, no mesh),
+          3. capacity is rounded UP to whole per-shard blocks of the
+             new mesh (survivors never stop fitting),
+          4. survivors are remapped (ascending old-slot order) and
+             their state re-laid bitwise onto the new layout,
+          5. params / frontend calibration are re-replicated and the
+             jitted programs REBUILT — unlike `resize`, the mesh
+             changed, and the programs' NamedShardings name it,
+          6. the lost shard's streams are reopened under their own
+             stream ids on fresh zeroed slots (their state died with
+             the device; the caller replays or resumes their audio).
+
+        Returns a summary dict: ``lost_shard``, ``n_devices`` /
+        ``max_streams`` (after), ``reopened`` (stream ids that lost
+        state), ``survivors`` (stream ids bit-preserved).
+        """
+        if self.mesh is None:
+            raise ValueError(
+                "single-device server has no shards to lose"
+            )
+        if not 0 <= lost_shard < self.n_devices:
+            raise ValueError(
+                f"lost_shard {lost_shard} outside "
+                f"[0, {self.n_devices})"
+            )
+        from repro.distributed.fault_tolerance import ElasticMeshManager
+        from repro.serving.autoscale import shard_of_slot
+
+        # gather BEFORE the mesh shrinks: in this simulation the host
+        # can still read every shard; only the lost block's rows are
+        # treated as gone (never copied into the new layout)
+        host = self._host_state()
+        healthy = surviving_devices(self.mesh, lost_shard)
+        manager = ElasticMeshManager(
+            make_mesh=lambda n: stream_mesh(healthy[:n]),
+            initial_data_size=self.n_devices,
+        )
+        new_mesh = manager.shrink(1)
+        new_n = manager.data_size
+        if new_n == 1:
+            new_mesh = None  # single-device fallback, like __init__
+        new_max = -(-self.max_streams // new_n) * new_n
+        survivors = {
+            sid: slot for sid, slot in self.active.items()
+            if shard_of_slot(slot, self.max_streams, self.n_devices)
+            != lost_shard
+        }
+        affected = sorted(
+            (slot, sid) for sid, slot in self.active.items()
+            if sid not in survivors
+        )
+        occupied = sorted(survivors.values())
+        router, mapping = StreamRouter.remap(occupied, new_max, new_n)
+        new_host = self._relay_state(
+            host, new_max, occupied, [mapping[s] for s in occupied]
+        )
+        self.mesh = new_mesh
+        self.n_devices = new_n
+        self.max_streams = new_max
+        # replicated operands follow the mesh; state takes the new
+        # block layout; programs rebuild against the new shardings
+        if new_mesh is not None:
+            self.params = jax.device_put(
+                self.params, replicated_shardings(self.params, new_mesh)
+            )
+            self.frontend_state = jax.device_put(
+                self.frontend_state,
+                replicated_shardings(self.frontend_state, new_mesh),
+            )
+        else:
+            to_default = lambda t: jax.device_put(np.asarray(t))  # noqa: E731
+            self.params = jax.tree.map(to_default, self.params)
+            self.frontend_state = jax.tree.map(
+                to_default, self.frontend_state
+            )
+        self.state = self._place_state(new_host)
+        self.active = {
+            sid: mapping[slot] for sid, slot in survivors.items()
+        }
+        self.router = router
+        self._compile_programs()
+        # reopen the lost streams: same ids, fresh zeroed slots (old
+        # slot order keeps the reopening deterministic for the oracle)
+        reopened = []
+        for _old_slot, sid in affected:
+            slot = self.router.acquire()
+            self.active[sid] = slot
+            self.state = self._reset(self.state, jnp.int32(slot))
+            reopened.append(sid)
+        return {
+            "lost_shard": lost_shard,
+            "n_devices": new_n,
+            "max_streams": new_max,
+            "reopened": reopened,
+            "survivors": sorted(survivors),
+        }
 
     # ---- serving ----
 

@@ -1,4 +1,7 @@
-"""Fault-tolerance control flow: stragglers, elastic shrink, manager."""
+"""Fault-tolerance control flow: stragglers, elastic shrink, manager,
+and the occupancy/SLO-driven serving autoscaler policy (host-side unit
+tests against a fake server; the end-to-end resize bit-identity story
+lives in tests/test_serve_sharded.py)."""
 
 import pytest
 
@@ -8,6 +11,7 @@ from repro.distributed.fault_tolerance import (
     ElasticMeshManager,
     StragglerMonitor,
 )
+from repro.serving.autoscale import Autoscaler, AutoscalePolicy
 
 
 def test_straggler_detection_and_budget():
@@ -55,3 +59,189 @@ def test_checkpoint_manager_periodic(tmp_path):
         mgr.maybe_save(step, tree)
     restored, step = mgr.restore_latest(tree)
     assert step == 30
+
+
+def test_straggler_warmup_discards_compile_step():
+    """Regression: the EMA used to seed from the very FIRST duration —
+    step 0 of any jitted loop includes compilation, so a ~100x-slow
+    compile step became the baseline and genuinely slow steps were
+    never flagged. The default warmup=1 discards it; the EMA seeds
+    from the first post-warmup step."""
+    mon = StragglerMonitor(threshold=2.0, budget=1)
+    assert not mon.record(0, 100.0)  # compile step: discarded entirely
+    assert not mon.record(1, 1.0)    # seeds the EMA
+    assert mon.ema == 1.0            # NOT 100.0 (the pre-fix poison)
+    # a 3x-slow step is a straggler against the healthy baseline;
+    # pre-fix it looked fast against the 100.0 baseline and this
+    # returned False
+    assert mon.record(2, 3.0)
+    assert len(mon.events) == 1 and mon.events[0].duration == 3.0
+
+
+def test_straggler_warmup_knob():
+    # warmup=0 opts back into seeding from the first duration
+    mon = StragglerMonitor(threshold=2.0, budget=1, warmup=0)
+    mon.record(0, 4.0)
+    assert mon.ema == 4.0
+    # longer warmups discard exactly that many steps
+    mon = StragglerMonitor(warmup=3)
+    for step in range(3):
+        mon.record(step, 99.0)
+    assert mon.ema is None
+    mon.record(3, 1.0)
+    assert mon.ema == 1.0
+    with pytest.raises(ValueError, match="warmup"):
+        StragglerMonitor(warmup=-1)
+
+
+def test_checkpoint_manager_skips_step_zero(tmp_path):
+    """Regression: `0 % every_steps == 0`, so step 0 used to save the
+    untrained init — burning a `keep` slot and making it
+    `restore_latest`'s answer after an early crash."""
+    from repro.training.checkpoint import latest_step
+
+    mgr = CheckpointManager(
+        CheckpointPolicy(str(tmp_path), every_steps=10, async_save=False)
+    )
+    tree = {"w": [0.0]}
+    mgr.maybe_save(0, tree)
+    assert latest_step(str(tmp_path)) is None  # nothing saved
+    with pytest.raises(FileNotFoundError):
+        mgr.restore_latest(tree)
+
+
+def test_checkpoint_keep_rotation_around_step_zero_fix(tmp_path):
+    """`keep` retains the NEWEST trained checkpoints: with keep=2 and
+    saves at 10/20/30, steps 20 and 30 survive — and step 0 never
+    occupied a slot in the first place."""
+    import jax.numpy as jnp
+
+    from repro.training.checkpoint import latest_step, restore_checkpoint
+
+    mgr = CheckpointManager(
+        CheckpointPolicy(
+            str(tmp_path), every_steps=10, keep=2, async_save=False
+        )
+    )
+    for step in range(0, 31):
+        mgr.maybe_save(step, {"w": jnp.full((2,), float(step))})
+    mgr.wait()
+    kept = sorted(p.name for p in tmp_path.iterdir())
+    assert kept == ["step_000000020", "step_000000030"]
+    assert latest_step(str(tmp_path)) == 30
+    restored, step = restore_checkpoint(
+        str(tmp_path), {"w": jnp.zeros((2,))}
+    )
+    assert step == 30 and float(restored["w"][0]) == 30.0
+
+
+# --------------------------------------------------------------------------
+# autoscaler policy (host-side, against a fake server)
+# --------------------------------------------------------------------------
+
+
+class _FakeServer:
+    """Just the surface `Autoscaler` drives: occupancy inputs and a
+    recording `resize`."""
+
+    def __init__(self, max_streams=16, n_devices=4, n_open=0):
+        self.max_streams = max_streams
+        self.n_devices = n_devices
+        self.active = {sid: sid for sid in range(n_open)}
+        self.resizes = []
+
+    def resize(self, n):
+        self.resizes.append(n)
+        self.max_streams = n
+
+
+def _policy(**kw):
+    base = dict(
+        min_streams=4, max_streams=64, grow_at=0.85, shrink_at=0.30,
+        hysteresis_ticks=3, cooldown_ticks=0, factor=2,
+    )
+    base.update(kw)
+    return AutoscalePolicy(**base)
+
+
+def test_autoscaler_grows_on_sustained_occupancy():
+    srv = _FakeServer(max_streams=16, n_open=15)  # 0.94 occupancy
+    auto = Autoscaler(srv, _policy())
+    assert auto.observe() is None
+    assert auto.observe() is None
+    assert auto.observe() == "grow"  # third consecutive breach
+    assert srv.resizes == [32]
+    assert srv.max_streams % srv.n_devices == 0
+
+
+def test_autoscaler_rejection_is_an_immediate_grow_signal():
+    srv = _FakeServer(max_streams=16, n_open=8)  # mid occupancy
+    auto = Autoscaler(srv, _policy())
+    auto.note_rejection()
+    assert auto.observe() == "grow"  # no hysteresis wait on rejection
+    assert srv.resizes == [32]
+
+
+def test_autoscaler_dead_zone_never_resizes():
+    srv = _FakeServer(max_streams=16, n_open=8)  # 0.5: between marks
+    auto = Autoscaler(srv, _policy())
+    assert all(auto.observe() is None for _ in range(20))
+    assert srv.resizes == []
+
+
+def test_autoscaler_shrinks_only_when_slo_healthy():
+    # low occupancy AND healthy latency -> shrink after hysteresis
+    srv = _FakeServer(max_streams=32, n_open=4)
+    mon = StragglerMonitor(threshold=2.0, budget=100, warmup=0)
+    auto = Autoscaler(srv, _policy(), monitor=mon)
+    for _ in range(2):
+        assert auto.observe(1.0) is None
+    assert auto.observe(1.0) == "shrink"
+    assert srv.resizes == [16]
+    # low occupancy but a straggler streak -> shrink is vetoed until
+    # the latency recovers (shrinking packs more streams per device)
+    srv2 = _FakeServer(max_streams=32, n_open=4)
+    mon2 = StragglerMonitor(threshold=2.0, budget=100, warmup=0)
+    auto2 = Autoscaler(srv2, _policy(), monitor=mon2)
+    auto2.observe(1.0)  # seeds the EMA
+    for _ in range(5):
+        assert auto2.observe(10.0) is None  # breached: vetoed
+    assert srv2.resizes == []
+    acts = [auto2.observe(1.0) for _ in range(3)]  # healthy again
+    assert "shrink" in acts and srv2.resizes == [16]
+
+
+def test_autoscaler_shrink_clamps_to_open_blocks():
+    # 9 open streams on 4 devices need ceil(9/4)*4 = 12 slots; the
+    # halving target 8 is clamped up to the 12-slot block floor
+    srv = _FakeServer(max_streams=16, n_devices=4, n_open=9)
+    # 9/16 = 0.56 sits in the dead zone; widen shrink_at to force the
+    # shrink path so the clamp is what's under test
+    auto = Autoscaler(srv, _policy(shrink_at=0.60, grow_at=0.85))
+    for _ in range(3):
+        auto.observe()
+    assert srv.resizes == [12]
+    assert srv.max_streams >= len(srv.active)
+
+
+def test_autoscaler_cooldown_and_caps():
+    srv = _FakeServer(max_streams=16, n_open=16)
+    auto = Autoscaler(srv, _policy(cooldown_ticks=5, max_streams=32))
+    acts = [auto.observe() for _ in range(12)]
+    assert acts.count("grow") == 1  # cooldown blocks a back-to-back act
+    # at the cap: occupancy stays high but no further grow fires
+    srv.active = {sid: sid for sid in range(32)}
+    assert all(auto.observe() is None for _ in range(10))
+    assert srv.resizes == [32]
+    assert auto.events and auto.events[0]["action"] == "grow"
+
+
+def test_autoscale_policy_validation():
+    with pytest.raises(ValueError, match="shrink_at"):
+        AutoscalePolicy(grow_at=0.3, shrink_at=0.8)
+    with pytest.raises(ValueError, match="min_streams"):
+        AutoscalePolicy(min_streams=0)
+    with pytest.raises(ValueError, match="factor"):
+        AutoscalePolicy(factor=1)
+    with pytest.raises(ValueError, match="hysteresis"):
+        AutoscalePolicy(hysteresis_ticks=0)

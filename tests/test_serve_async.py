@@ -370,6 +370,55 @@ def test_ingress_protocol_errors(qat_server):
     assert ing.in_flight == 0
 
 
+def test_ingress_reallocates_after_resize(qat_server):
+    """A live `resize()` invalidates the preallocated slabs: staging
+    with old-capacity work still in flight raises (those buffers may
+    still be read by the device), while drain() + stage() silently
+    reallocates at the new capacity — and both the pre- and
+    post-resize ticks bit-match a synchronous twin resized at the same
+    point."""
+    pipe, base = qat_server
+    srv = StreamingKWSServer(pipe, base.params, max_streams=MAX_STREAMS)
+    twin = StreamingKWSServer(pipe, base.params, max_streams=MAX_STREAMS)
+    for sid in range(MAX_STREAMS):
+        srv.open_stream(sid)
+        twin.open_stream(sid)
+    dim = pipe.config.fex.num_channels
+    ing = PipelinedIngress(srv, dim, depth=2)
+    ref = []
+    for s, m in _ticks(pipe, 3, "fv", seed=21):
+        slab, mask = ing.stage()
+        slab[:] = s
+        mask[:] = m
+        ing.commit()
+        ref.append(twin.step_batch(s, m))
+    assert ing.in_flight > 0
+    grown = MAX_STREAMS * 2
+    srv.resize(grown)
+    with pytest.raises(RuntimeError, match="drain"):
+        ing.stage()  # in-flight dispatches hold old-capacity slabs
+    for h, (rs, rt) in zip(ing.drain(), ref):
+        np.testing.assert_array_equal(h.scores, rs)
+        np.testing.assert_array_equal(h.top, rt)
+    twin.resize(grown)
+    assert twin.active == srv.active  # single-device remap is identity
+    for k, (s, m) in enumerate(
+        _ticks(pipe, 3, "fv", seed=22, n_streams=grown)
+    ):
+        m[MAX_STREAMS:] = False  # grown slots are still unopened
+        slab, mask = ing.stage()
+        assert slab.shape == (grown, dim)  # reallocated, new capacity
+        assert mask.shape == (grown,)
+        slab[:] = s
+        mask[:] = m
+        ing.commit(meta=k)
+        ref.append(twin.step_batch(s, m))
+    for h, (rs, rt) in zip(ing.drain(), ref[3:]):
+        np.testing.assert_array_equal(h.scores, rs)
+        np.testing.assert_array_equal(h.top, rt)
+    _assert_states_identical(srv, twin)
+
+
 # --------------------------------------------------------------------------
 # TickCoalescer
 # --------------------------------------------------------------------------

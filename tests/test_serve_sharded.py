@@ -615,13 +615,33 @@ class LifecycleOracle:
         self.slot_of = {}
         self.frames = {}
 
-    def open(self, sid):
+    def _place(self, sid):
         loads = [self.per_shard - len(f) for f in self.free]
         shard = min(
             (ld, s) for s, ld in enumerate(loads) if self.free[s]
         )[1]
         self.slot_of[sid] = self.free[shard].pop(0)
+
+    def open(self, sid):
+        self._place(sid)
         self.frames[sid] = []
+
+    def resize(self, new_max):
+        """Model of `StreamingKWSServer.resize`'s router remap: fresh
+        free lists at the new capacity, survivors re-placed in
+        ascending OLD-slot order through the same least-loaded rule.
+        Frames are untouched — a resize must never change what a
+        stream has seen."""
+        order = sorted(self.slot_of, key=self.slot_of.get)
+        self.max_streams = new_max
+        self.per_shard = new_max // self.n_shards
+        self.free = [
+            sorted(range(s * self.per_shard, (s + 1) * self.per_shard))
+            for s in range(self.n_shards)
+        ]
+        self.slot_of = {}
+        for sid in order:
+            self._place(sid)
 
     def close(self, sid):
         slot = self.slot_of.pop(sid)
@@ -809,4 +829,479 @@ def test_random_schedule_cascade_wake_rate_oracle(
         np.testing.assert_array_equal(
             sharded.wake_rate[slot], reference.wake_rate[0]
         )
+        reference.close_stream(sid)
+
+
+# --------------------------------------------------------------------------
+# elastic capacity: live resize (grow / shrink) & shard-loss recovery
+# --------------------------------------------------------------------------
+
+GROWN = MAX_STREAMS * 2
+
+
+def test_resize_grow_shrink_bit_identical(server_pair):
+    """Grow then shrink back, live, against an UN-resized single-device
+    server: every surviving stream's posteriors and full per-slot state
+    (GRU/delta/carry/scores leaves) stay bit-identical through both
+    moves — for every classifier backend."""
+    single, sharded = server_pair
+    _reset_pair(server_pair)
+    for srv in (single, sharded):
+        for sid in range(10):
+            srv.open_stream(sid)
+    rng = np.random.default_rng(30)
+
+    def tick(n):
+        for _ in range(n):
+            frames = {
+                sid: rng.standard_normal(16).astype(np.float32)
+                for sid in sorted(sharded.active)
+            }
+            out_a = single.step(frames)
+            out_b = sharded.step(frames)
+            for sid in frames:
+                np.testing.assert_array_equal(
+                    out_a[sid]["probs"], out_b[sid]["probs"]
+                )
+                assert out_a[sid]["top"] == out_b[sid]["top"]
+
+    try:
+        tick(2)
+        sharded.resize(GROWN)
+        assert sharded.max_streams == GROWN
+        assert sharded.router.max_streams == GROWN
+        tick(2)
+        # grown capacity is genuinely usable: open past the old limit
+        for sid in range(100, 100 + MAX_STREAMS):
+            sharded.open_stream(sid)
+        assert len(sharded.active) > MAX_STREAMS
+        for sid in range(100, 100 + MAX_STREAMS):
+            sharded.close_stream(sid)
+        sharded.resize(MAX_STREAMS)
+        tick(2)
+        # full per-slot state, not just scores, survived both moves
+        for sid in sorted(single.active):
+            jax.tree_util.tree_map(
+                np.testing.assert_array_equal,
+                _slot_slice(single, sid),
+                _slot_slice(sharded, sid),
+            )
+    finally:
+        if sharded.max_streams != MAX_STREAMS:
+            sharded.resize(MAX_STREAMS)  # module-scoped fixture
+
+
+def test_resize_keeps_mesh_layout(server_pair):
+    """After a grow every state leaf is still block-sharded over the
+    SAME ("stream",) mesh at the new capacity, params stay replicated,
+    and the router's placement stays balanced — no program rebuild, no
+    layout drift."""
+    _, sharded = server_pair
+    _reset_pair(server_pair)
+    for sid in range(MAX_STREAMS):
+        sharded.open_stream(sid)
+    mesh_before = sharded.mesh
+    tick_before = sharded._tick_fv
+    try:
+        sharded.resize(GROWN)
+        assert sharded.mesh is mesh_before
+        # resize must NOT rebuild the jitted programs (shape-agnostic
+        # NamedShardings; jax's own cache handles the retrace)
+        assert sharded._tick_fv is tick_before
+        for leaf in jax.tree_util.tree_leaves(sharded.state):
+            assert leaf.shape[0] == GROWN
+            spec = leaf.sharding.spec
+            assert spec and spec[0] == STREAM_AXIS, spec
+        for leaf in jax.tree_util.tree_leaves(sharded.params):
+            assert leaf.sharding.is_fully_replicated
+        loads = sharded.router.shard_loads()
+        assert max(loads) - min(loads) <= 1
+        assert sum(loads) == len(sharded.active)
+    finally:
+        sharded.resize(MAX_STREAMS)
+
+
+def test_resize_validation(server_pair):
+    _, sharded = server_pair
+    _reset_pair(server_pair)
+    for sid in range(10):
+        sharded.open_stream(sid)
+    with pytest.raises(ValueError, match="divide over"):
+        sharded.resize(MAX_STREAMS + 1)
+    with pytest.raises(ValueError, match=">= 1"):
+        sharded.resize(0)
+    with pytest.raises(RuntimeError, match="open"):
+        sharded.resize(MESH_DEV)  # 10 open streams never fit
+    # same capacity is a no-op: same state object, nothing re-laid
+    state_before = sharded.state
+    sharded.resize(MAX_STREAMS)
+    assert sharded.state is state_before
+
+
+def test_resize_with_async_handle_in_flight(backend):
+    """A TickHandle dispatched BEFORE a resize stays valid after it:
+    the handle owns device-side copies, so its scores bit-match the
+    synchronous un-resized twin however late it is fetched. The twin
+    is a second SHARDED server (identical router placement — slot-
+    major `step_batch` comparisons are only meaningful between servers
+    that place the same stream on the same slot)."""
+    pipe, params = backend
+    sharded = StreamingKWSServer(
+        pipe, params, max_streams=MAX_STREAMS, devices=MESH_DEV
+    )
+    twin = StreamingKWSServer(
+        pipe, params, max_streams=MAX_STREAMS, devices=MESH_DEV
+    )
+    for srv in (sharded, twin):
+        for sid in range(MAX_STREAMS):
+            srv.open_stream(sid)
+    assert sharded.active == twin.active  # identical placement
+    rng = np.random.default_rng(31)
+    mask = np.ones(MAX_STREAMS, bool)
+    fv1 = rng.standard_normal((MAX_STREAMS, 16)).astype(np.float32)
+    fv2 = rng.standard_normal((MAX_STREAMS, 16)).astype(np.float32)
+    s1, t1 = twin.step_batch(fv1, mask)
+    handle = sharded.step_batch_async(fv1, mask)
+    sharded.resize(GROWN)  # before the handle is fetched
+    s_b, t_b = handle.result()
+    np.testing.assert_array_equal(s1, s_b)
+    np.testing.assert_array_equal(t1, t_b)
+    # and the resized server keeps serving bit-identically, per sid
+    out_a = twin.step({sid: fv2[sid] for sid in range(MAX_STREAMS)})
+    out_b = sharded.step({sid: fv2[sid] for sid in range(MAX_STREAMS)})
+    for sid in range(MAX_STREAMS):
+        np.testing.assert_array_equal(
+            out_a[sid]["probs"], out_b[sid]["probs"]
+        )
+
+
+def test_resize_cascaded_bit_identical(norm_stats):
+    """A GATED cascaded server (real wake threshold + hangover) grown
+    and shrunk mid-traffic: per-stream scores AND the wake-rate
+    telemetry bit-match the un-resized single-device twin — detector
+    state (awake latch, hangover countdown, woken/ticks counters) is
+    carried bitwise like every other leaf."""
+    pipe = KWSPipeline(
+        KWSPipelineConfig(
+            classifier="qat",
+            cascade=CascadeConfig(wake_threshold=0.3, hangover_frames=1),
+        ),
+        norm_stats=norm_stats,
+    )
+    params = pipe.init_params(jax.random.PRNGKey(33))
+    single = StreamingKWSServer(pipe, params, max_streams=MAX_STREAMS)
+    sharded = StreamingKWSServer(
+        pipe, params, max_streams=MAX_STREAMS, devices=MESH_DEV
+    )
+    for srv in (single, sharded):
+        for sid in range(12):
+            srv.open_stream(sid)
+    rng = np.random.default_rng(34)
+
+    def tick(n):
+        for _ in range(n):
+            frames = {}
+            for sid in sorted(sharded.active):
+                scale = 3.0 if rng.random() < 0.5 else 0.02
+                frames[sid] = (
+                    rng.standard_normal(16) * scale
+                ).astype(np.float32)
+            out_a = single.step(frames)
+            out_b = sharded.step(frames)
+            for sid in frames:
+                np.testing.assert_array_equal(
+                    out_a[sid]["probs"], out_b[sid]["probs"]
+                )
+
+    tick(3)
+    sharded.resize(GROWN)
+    tick(3)
+    sharded.resize(MAX_STREAMS)
+    tick(3)
+    wr_a, wr_b = single.wake_rate, sharded.wake_rate
+    for sid in sorted(single.active):
+        np.testing.assert_array_equal(
+            wr_a[single.active[sid]], wr_b[sharded.active[sid]]
+        )
+    assert (wr_b[: len(sharded.active)] < 1.0).any() or (
+        wr_a < 1.0
+    ).any()  # the gate really gated through the moves
+
+
+def test_shard_loss_recovery(backend):
+    """Simulated loss of one shard: recovery shrink-reshards onto the
+    surviving devices, healthy streams' per-slot state is BIT-unchanged
+    through the move, the lost shard's streams reopen (same ids) on
+    fresh zeroed slots, and post-recovery serving bit-matches a
+    single-device replay of each stream's surviving history — for
+    every classifier backend.
+
+    The reference is width-matched (same max_streams, one device):
+    XLA vectorizes the float classifier differently at different batch
+    widths, so bit-identity only holds at a fixed slot-axis width —
+    which is exactly what recovery preserves (16 slots before and
+    after losing a shard here), while the device count shrinks."""
+    pipe, params = backend
+    sharded = StreamingKWSServer(
+        pipe, params, max_streams=MAX_STREAMS, devices=MESH_DEV
+    )
+    reference = StreamingKWSServer(pipe, params, max_streams=MAX_STREAMS)
+    rng = np.random.default_rng(35)
+    history = {sid: [] for sid in range(12)}
+    for sid in range(12):
+        sharded.open_stream(sid)
+
+    def tick(n):
+        for _ in range(n):
+            frames = {
+                sid: rng.standard_normal(16).astype(np.float32)
+                for sid in sorted(sharded.active)
+            }
+            sharded.step(frames)
+            for sid, f in frames.items():
+                history[sid].append(f)
+
+    tick(3)
+    lost = 1
+    pre = {sid: _slot_slice(sharded, sid) for sid in sharded.active}
+    lost_sids = {
+        sid for sid, slot in sharded.active.items()
+        if shard_of_slot(slot, MAX_STREAMS, MESH_DEV) == lost
+    }
+    assert lost_sids  # 12 streams round-robin over <= 8 shards
+    info = sharded.recover_shard_loss(lost)
+    assert set(info["reopened"]) == lost_sids
+    assert set(info["survivors"]) == set(range(12)) - lost_sids
+    assert sharded.n_devices < MESH_DEV
+    assert sharded.max_streams % sharded.n_devices == 0
+    assert set(sharded.active) == set(range(12))  # same ids throughout
+    # healthy shards' per-stream state: bit-unchanged through the move
+    for sid in info["survivors"]:
+        jax.tree_util.tree_map(
+            np.testing.assert_array_equal,
+            pre[sid],
+            _slot_slice(sharded, sid),
+        )
+    # the lost shard's streams: fresh zeroed slots, history restarted
+    for sid in info["reopened"]:
+        jax.tree_util.tree_map(
+            lambda t: np.testing.assert_array_equal(t, np.zeros_like(t)),
+            _slot_slice(sharded, sid),
+        )
+        history[sid] = []
+    # the state leaves live on the SMALLER mesh now
+    if sharded.mesh is not None:
+        for leaf in jax.tree_util.tree_leaves(sharded.state):
+            assert len(leaf.devices()) == sharded.n_devices
+    tick(2)
+    # every stream bit-matches a single-device replay of the frames its
+    # surviving state has seen
+    for sid in sorted(sharded.active):
+        reference.open_stream(sid)
+        expected = np.zeros_like(np.asarray(reference.state.scores[0]))
+        for f in history[sid]:
+            out = reference.step({sid: f})
+            expected = out[sid]["probs"]
+        np.testing.assert_array_equal(
+            sharded.scores[sharded.active[sid]], expected
+        )
+        reference.close_stream(sid)
+
+
+def test_shard_loss_validation(server_pair, backend):
+    _, sharded = server_pair
+    with pytest.raises(ValueError, match="outside"):
+        sharded.recover_shard_loss(sharded.n_devices)
+    pipe, params = backend
+    single = StreamingKWSServer(pipe, params, max_streams=4)
+    with pytest.raises(ValueError, match="no shards"):
+        single.recover_shard_loss(0)
+
+
+# --------------------------------------------------------------------------
+# router: churn at capacity boundaries + remap
+# --------------------------------------------------------------------------
+
+def test_shard_of_slot_validates_divisibility():
+    """Regression: max_streams=10 over 4 shards used to silently
+    truncate to 2-slot blocks, reporting slot 9 on 'shard 4' — an
+    index past the mesh. Uneven geometry is now an error at the
+    function itself, not only in StreamRouter.__init__."""
+    with pytest.raises(ValueError, match="divide evenly"):
+        shard_of_slot(9, 10, 4)
+    with pytest.raises(ValueError, match="n_shards"):
+        shard_of_slot(0, 8, 0)
+    with pytest.raises(ValueError, match="outside"):
+        shard_of_slot(8, 8, 4)
+    assert shard_of_slot(5, 8, 4) == 2
+
+
+def test_router_churn_at_capacity_boundaries():
+    """Random release/acquire interleavings: every acquire targets a
+    least-loaded shard (with free capacity), double-release raises,
+    acquire-at-full raises, and one release reopens exactly one
+    slot."""
+    rng = np.random.default_rng(40)
+    r = StreamRouter(MAX_STREAMS, MESH_DEV)
+    held = []
+    for _ in range(300):
+        if held and (rng.random() < 0.45 or r.free_count == 0):
+            s = held.pop(int(rng.integers(len(held))))
+            r.release(s)
+            with pytest.raises(ValueError, match="already free"):
+                r.release(s)
+        else:
+            loads_before = r.shard_loads()
+            slot = r.acquire()
+            shard = shard_of_slot(slot, MAX_STREAMS, MESH_DEV)
+            eligible = [
+                ld for ld in loads_before if ld < r.slots_per_shard
+            ]
+            assert loads_before[shard] == min(eligible)
+            held.append(slot)
+    while r.free_count:
+        held.append(r.acquire())
+    with pytest.raises(RuntimeError, match="capacity"):
+        r.acquire()
+    r.release(held.pop())
+    assert r.free_count == 1
+    held.append(r.acquire())
+    with pytest.raises(RuntimeError, match="capacity"):
+        r.acquire()
+
+
+def test_router_remap_survives_resize():
+    """Placements survive a resize remap: deterministic mapping in
+    ascending old-slot order, balanced on the new geometry, further
+    acquires continue the round-robin fill, and impossible remaps
+    (overflow, duplicates) are rejected before any state would move."""
+    r = StreamRouter(MAX_STREAMS, MESH_DEV)
+    slots = [r.acquire() for _ in range(MAX_STREAMS)]
+    kept = [s for i, s in enumerate(slots) if i % 3]  # scattered subset
+    # grow remap
+    r2, mapping = StreamRouter.remap(kept, GROWN, MESH_DEV)
+    assert sorted(mapping) == sorted(kept)
+    assert len(set(mapping.values())) == len(kept)
+    assert all(0 <= v < GROWN for v in mapping.values())
+    loads = r2.shard_loads()
+    assert max(loads) - min(loads) <= 1
+    assert sum(loads) == len(kept)
+    # deterministic: identical inputs -> identical mapping
+    _, mapping2 = StreamRouter.remap(kept, GROWN, MESH_DEV)
+    assert mapping2 == mapping
+    # the remapped router keeps allocating balanced
+    extra = r2.acquire()
+    assert extra not in set(mapping.values())
+    loads = r2.shard_loads()
+    assert max(loads) - min(loads) <= 1
+    # shrink remap down to the exact occupied count still fits
+    n_kept = len(kept)
+    target = -(-n_kept // MESH_DEV) * MESH_DEV
+    r3, m3 = StreamRouter.remap(kept, target, MESH_DEV)
+    assert sorted(m3.values()) == list(range(n_kept)) or len(
+        set(m3.values())
+    ) == n_kept
+    assert r3.free_count == target - n_kept
+    # rejected remaps
+    with pytest.raises(ValueError, match="cannot remap"):
+        StreamRouter.remap(list(range(MESH_DEV + 1)), MESH_DEV, MESH_DEV)
+    with pytest.raises(ValueError, match="unique"):
+        StreamRouter.remap([1, 1], MAX_STREAMS, MESH_DEV)
+
+
+# --------------------------------------------------------------------------
+# property test: random lifecycles WITH live resizes vs the oracle
+# --------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def resize_oracle_servers(norm_stats):
+    """(elastic sharded server, single-device 1-slot reference) —
+    capacity starts at 8 and toggles among {8, 16, 32} across
+    examples, so jax's shape-keyed jit cache amortizes the retraces."""
+    pipe = KWSPipeline(
+        KWSPipelineConfig(classifier="qat"), norm_stats=norm_stats
+    )
+    params = pipe.init_params(jax.random.PRNGKey(9))
+    sharded = StreamingKWSServer(
+        pipe, params, max_streams=8, devices=MESH_DEV
+    )
+    reference = StreamingKWSServer(pipe, params, max_streams=1)
+    return sharded, reference
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    events=st.lists(
+        st.tuples(
+            st.booleans(),  # open a new stream before this tick?
+            st.booleans(),  # close the oldest open stream first?
+            st.integers(min_value=0, max_value=255),  # submit bitmask
+            st.sampled_from(("none", "grow", "shrink")),  # resize after
+        ),
+        min_size=2,
+        max_size=6,
+    ),
+)
+def test_random_schedule_with_resize_matches_oracle(
+    resize_oracle_servers, seed, events
+):
+    """The lifecycle-oracle harness extended with live resizes: random
+    open/close/submit/grow/shrink schedules, placements matching the
+    oracle's independent remap model after every event, and each open
+    stream's final scores bit-matching a single-device replay of its
+    own frames — a resize is invisible to every surviving stream."""
+    sharded, reference = resize_oracle_servers
+    for sid in list(sharded.active):
+        sharded.close_stream(sid)
+    sharded.resize(8)
+    oracle = LifecycleOracle(8, sharded.n_devices)
+    rng = np.random.default_rng(seed)
+    next_sid = 0
+
+    def do_open():
+        nonlocal next_sid
+        sharded.open_stream(next_sid)
+        oracle.open(next_sid)
+        next_sid += 1
+
+    do_open()
+    for want_open, want_close, submit_bits, action in events:
+        if want_close and len(oracle.slot_of) > 1:
+            victim = min(oracle.slot_of)
+            sharded.close_stream(victim)
+            oracle.close(victim)
+        if want_open and len(oracle.slot_of) < sharded.max_streams:
+            do_open()
+        open_sids = sorted(oracle.slot_of)
+        frames = {}
+        for i, sid in enumerate(open_sids):
+            if submit_bits >> (i % 8) & 1:
+                f = rng.standard_normal(16).astype(np.float32)
+                frames[sid] = f
+                oracle.submit(sid, f)
+        sharded.step(frames)
+        new_max = None
+        if action == "grow" and sharded.max_streams < 32:
+            new_max = sharded.max_streams * 2
+        elif action == "shrink" and sharded.max_streams > 8:
+            half = sharded.max_streams // 2
+            if half >= len(sharded.active):
+                new_max = half
+        if new_max is not None:
+            sharded.resize(new_max)
+            oracle.resize(new_max)
+        # placement matches the oracle's independent remap model
+        assert oracle.slot_of == dict(sharded.active)
+    # every open stream's scores == single-device replay of its frames
+    for sid in sorted(oracle.slot_of):
+        reference.open_stream(sid)
+        expected = np.zeros_like(
+            np.asarray(reference.state.scores[0])
+        )
+        for f in oracle.frames[sid]:
+            out = reference.step({sid: f})
+            expected = out[sid]["probs"]
+        got = sharded.scores[sharded.active[sid]]
+        np.testing.assert_array_equal(got, expected)
         reference.close_stream(sid)
