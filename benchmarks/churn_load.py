@@ -25,12 +25,21 @@ departures, while the occupancy/SLO autoscaler
     shrink watermark and the autoscaler halves capacity under
     hysteresis, SLO veto, and the open-streams block floor.
 
-Tick latencies are measured per blocking `step_batch` call. The first
-tick after any capacity change runs a freshly traced program at the new
-slot width — that compile spike is excluded from the steady-state
-percentiles and recorded separately (``resize.post_change_compile_ms``),
-as are the in-band pauses of the `resize()` / `recover_shard_loss()`
-calls themselves (``pause_ms`` / ``recovery_ms``).
+Tick latencies come from the server's own observability layer
+(``metrics=True``): each blocking `step_batch` observes into the
+``kws_serve_tick_ms`` histogram, and the bench reads ``.last`` off it.
+A tick that traced+compiled a fresh program — the first tick ever, and
+the first tick at any slot width this program set has not served yet —
+is excluded from the steady-state percentiles EXACTLY, by comparing
+`srv.retrace_count` around the call (the counted shape-keyed retraces
+of the serving stack; the old next-tick-after-resize heuristic both
+missed recompiles it didn't know about and excluded warm cache-hit
+ticks after a resize back to a seen capacity). Compile ticks are
+recorded separately (``resize.post_change_compile_ms``), as are the
+in-band pauses of the `resize()` / `recover_shard_loss()` calls
+themselves (``pause_ms`` / ``recovery_ms``); the full registry
+snapshot (histograms, decision journal, gauges) lands in
+``METRICS_churn.json`` next to the BENCH artifact.
 
 Writes ``BENCH_churn.json`` (every field documented in
 benchmarks/common.py, ``BENCH_CHURN_FIELDS``) and gates an SLO block:
@@ -107,8 +116,10 @@ def run(classifier="qat", devices=1, shard_loss=False, seed=0,
     pipe = _pipeline(classifier)
     params = pipe.init_params(jax.random.PRNGKey(0))
     srv = StreamingKWSServer(
-        pipe, params, max_streams=START_CAPACITY, devices=devices
+        pipe, params, max_streams=START_CAPACITY, devices=devices,
+        metrics=True,
     )
+    tick_hist = srv.metrics.histogram("kws_serve_tick_ms")
     policy = AutoscalePolicy(
         min_streams=max(8, devices),
         max_streams=MAX_CAPACITY,
@@ -136,9 +147,6 @@ def run(classifier="qat", devices=1, shard_loss=False, seed=0,
     totals = {"opens": START_STREAMS, "closes": 0, "rejections": 0,
               "arrivals": START_STREAMS, "stream_frames": 0}
     step = 0
-    # the very first tick traces the program — a compile spike, not a
-    # steady-state latency, same as every post-resize first tick
-    skip_next_latency = True
     wall_t0 = time.perf_counter()
     for name, n_ticks, rate, p_close, target in PHASES:
         lat, opens, closes, rejections, active_sum = [], 0, 0, 0, 0
@@ -195,19 +203,22 @@ def run(classifier="qat", devices=1, shard_loss=False, seed=0,
                     "n_devices_after": srv.n_devices,
                     "max_streams_after": srv.max_streams,
                 }
-                skip_next_latency = True  # recovery recompiled the tick
             # one fused tick over the current active set
             slab = np.zeros((srv.max_streams, dim), np.float32)
             mask = np.zeros((srv.max_streams,), bool)
             for sid, slot in srv.active.items():
                 slab[slot] = rng.standard_normal(dim).astype(np.float32) * 0.05
                 mask[slot] = True
-            t0 = time.perf_counter()
+            # tick latency comes from the server's own histogram; a
+            # tick whose dispatch traced+compiled a new program is
+            # identified EXACTLY by the retrace counter (no latency
+            # heuristic — a resize back to an already-compiled width
+            # is a warm tick and stays in the steady-state pool)
+            r0 = srv.retrace_count
             srv.step_batch(slab, mask)
-            dt = time.perf_counter() - t0
-            if skip_next_latency:
+            dt = tick_hist.last * 1e-3
+            if srv.retrace_count > r0:
                 compile_ms.append(dt * 1e3)
-                skip_next_latency = False
             else:
                 lat.append(dt)
             active_sum += len(srv.active)
@@ -218,7 +229,6 @@ def run(classifier="qat", devices=1, shard_loss=False, seed=0,
             action = auto.observe(dt)
             if action is not None:
                 pause_ms.append((time.perf_counter() - t0) * 1e3)
-                skip_next_latency = True  # new width -> fresh trace
             step += 1
         lat_ms = np.asarray(lat, np.float64) * 1e3
         phase_rows.append({
@@ -298,6 +308,10 @@ def run(classifier="qat", devices=1, shard_loss=False, seed=0,
             "pause_ms": pause_ms,
             "max_pause_ms": max(pause_ms) if pause_ms else None,
             "post_change_compile_ms": compile_ms,
+            # exact jit accounting from the observability layer: the
+            # compile-tick exclusion above counted THESE retraces
+            "retraces": srv.retrace_count,
+            "compiles": srv.compile_count,
         },
         "shard_loss": loss_record,
         "totals": {
@@ -310,6 +324,11 @@ def run(classifier="qat", devices=1, shard_loss=False, seed=0,
     }
     with open("BENCH_churn.json", "w") as f:
         json.dump(payload, f, indent=2)
+    # full registry snapshot — tick histograms, occupancy gauges, and
+    # the journal of every autoscale / resize / retrace / shard-loss
+    # event with its reason, in order (the CI slow job uploads this)
+    with open("METRICS_churn.json", "w") as f:
+        json.dump(srv.metrics_snapshot(), f, indent=2)
     sizes = " -> ".join(
         str(s) for s in
         [START_CAPACITY] + [e["to"] for e in auto.events]

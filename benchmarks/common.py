@@ -263,6 +263,23 @@ def percentile_stats(latencies_s) -> Dict[str, float]:
                        telemetry)
         wake_threshold stage-1 wake threshold of the point's pipeline
                        (None when the sweep ran without --cascade)
+        retraces       counted jit retraces the row's server paid: the
+                       exact number of (program, operand-shape) keys
+                       first-dispatched since construction
+                       (`srv.retrace_count` — the counter
+                       benchmarks/churn_load.py uses to exclude compile
+                       ticks exactly). 1 for a steady-state row (the
+                       warmup tick traces once); None for the legacy
+                       path, which predates the counter
+        spans          pipelined rows only: per-span duration rollups
+                       of the row's `TickTrace` ring
+                       (repro.serving.metrics.span_percentiles) — span
+                       name ("stage_to_commit" / "commit_to_dispatch" /
+                       "dispatch_to_retire" / "total") ->
+                       {count, p50_ms, p99_ms, mean_ms}. The
+                       dispatch_to_retire span is the device-side
+                       residency; None for every other mode (the
+                       blocking modes have no pipeline stages)
         p50_ms/p99_ms  per-tick wall latency percentiles. Null for scan
                        rows: the replay returns to the host once, so
                        per-tick percentiles do not exist there (they
@@ -293,6 +310,20 @@ def percentile_stats(latencies_s) -> Dict[str, float]:
                      count), all at full occupancy, fv kind, devices=1
                      on the sweep's first classifier;
                      `--fail-on-slo` exits non-zero when violated
+      metrics_overhead
+                     the observability cost gate ("ok" bool): a
+                     metrics-enabled server's fused tick vs a
+                     metrics-off twin at 256 streams, fv, full
+                     occupancy, devices=1 (best-of-3 INTERLEAVED round
+                     means, so platform drift hits both arms equally) —
+                     mean_ms_metrics_off / mean_ms_metrics_on,
+                     overhead_frac (on/off - 1), budget_frac (0.05),
+                     ok = overhead_frac < budget_frac. `--fail-on-slo`
+                     exits non-zero when violated. The full registry
+                     snapshot of the metrics-on server (plus the
+                     deployment-relevant 256-stream sweep points) is
+                     written to ``METRICS_serve.json`` next to the
+                     BENCH artifact
       sparsity_speedup
                      the tick-kernel claim: the fused delta tick
                      benched against ITSELF across ΔGRU thresholds
@@ -338,11 +369,15 @@ live autoscaler resizes, and injected shard loss):
     ticks            ticks driven in the phase
     p50_ms/p99_ms/mean_ms
                      steady-state per-tick `step_batch` wall latency —
-                     compile ticks (the first tick overall and the
-                     first tick after any capacity change, which trace
-                     a fresh program at the new slot width) are
-                     EXCLUDED here and recorded under
-                     resize.post_change_compile_ms instead
+                     compile ticks are EXCLUDED here and recorded under
+                     resize.post_change_compile_ms instead. A compile
+                     tick is identified EXACTLY: the server's
+                     shape-keyed retrace counter (`srv.retrace_count`)
+                     incremented across the call. (The old heuristic —
+                     "skip the first tick after any capacity change" —
+                     missed recompiles it didn't predict and excluded
+                     warm cache-hit ticks after a resize back to a
+                     seen capacity)
     ticks_per_s      1e3 / mean_ms (blocking per-call cadence)
     mean_active      mean open-stream count over the phase's ticks
     capacity_end     server max_streams when the phase ended
@@ -359,10 +394,17 @@ live autoscaler resizes, and injected shard loss):
                      serving pause the tick loop actually felt)
     max_pause_ms     max(pause_ms), null when no resize fired
     post_change_compile_ms[]
-                     wall time of each excluded compile tick (first
-                     tick at a new slot width, plus the first tick
-                     after shard-loss recovery, which rebuilds the
-                     jitted programs on the shrunken mesh)
+                     wall time of each excluded compile tick (every
+                     tick whose dispatch traced a fresh program:
+                     first tick at a new slot width, plus the first
+                     tick after shard-loss recovery, which rebuilds
+                     the jitted programs on the shrunken mesh)
+    retraces         `srv.retrace_count` at exit — the exact number of
+                     (program, shape) first-dispatches the run paid;
+                     len(post_change_compile_ms) equals the retraces
+                     the tick loop itself triggered
+    compiles         `srv.compile_count` at exit: program rebuilds
+                     (construction + one per shard-loss recovery)
   shard_loss       null without --shard-loss, else the injected-loss
                    record:
     step               global tick index the loss was injected at
@@ -395,6 +437,11 @@ live autoscaler resizes, and injected shard loss):
                    AND shrank during drain, and (when injected) shard
                    loss left every healthy stream bit-unchanged.
                    `--fail-on-slo` exits non-zero when violated
+
+The run's full `srv.metrics_snapshot()` — tick histograms, occupancy
+gauges, and the structured event journal (every autoscale / resize /
+retrace / shard-loss event with its reason, in order) — is written to
+``METRICS_churn.json`` next to the BENCH artifact.
 """
 
 

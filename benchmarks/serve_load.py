@@ -106,6 +106,19 @@ occupancy, fv, qat, devices=1) AND live pipelined throughput >= 0.5x
 the scan ceiling on the same state at 64 and 256 streams.
 ``--fail-on-slo`` turns a violated gate into a non-zero exit for CI.
 
+Observability (PR 10): the instrumented modes are built with
+``metrics=True`` and CONSUME the server's own registry instead of
+private perf_counter lists — fused rows read per-tick latency from the
+``kws_serve_tick_ms`` histogram, pipelined rows read submit-to-scores
+latency and throughput from the ingress's stage→commit→dispatch→retire
+`TickTrace` spans (each pipelined row records the rolled-up ``spans``
+percentiles; every instrumented row records its counted ``retraces``).
+A ``metrics_overhead`` block measures metrics-on vs metrics-off fused
+ticks on identical traffic and gates the difference < 5%
+(``--fail-on-slo``), and the full registry snapshots of the
+deployment-relevant points land in ``METRICS_serve.json`` next to the
+BENCH artifact.
+
   PYTHONPATH=src python -m benchmarks.serve_load [--classifier all]
       [--devices auto|1|1,2,...] [--theta 0.25]
       [--tick-impl auto|xla|fused-pallas|fused-interpret]
@@ -129,6 +142,7 @@ from repro.core.gru_delta import DeltaConfig
 from repro.core.pipeline import KWSPipeline, KWSPipelineConfig
 from repro.serving.cascade import CascadeConfig
 from repro.serving.ingress import PipelinedIngress
+from repro.serving.metrics import span_percentiles
 from repro.serving.serve_loop import StreamingKWSServer
 
 N_TICKS = 40 if QUICK else 200
@@ -144,6 +158,15 @@ PIPELINE_WINDOW = 4
 # budget, live pipelined throughput within 2x of the scan ceiling
 SLO_P99_MS = 16.0
 SLO_MIN_VS_SCAN = 0.5
+# metrics-overhead gate (see _bench_metrics_overhead): a
+# metrics-enabled fused tick may cost < 5% throughput over metrics-off
+OVERHEAD_STREAMS = 256
+OVERHEAD_BUDGET_FRAC = 0.05
+
+# metrics snapshots captured per instrumented benched point, keyed
+# (mode, classifier, kind, max_streams, occupancy, devices); run()
+# writes the deployment-relevant ones to METRICS_serve.json
+_SNAPSHOTS = {}
 
 
 class _LegacyStreamingServer:
@@ -278,6 +301,7 @@ def _bench_mode(mode, kind, pipe, params, max_streams, occupancy, n_ticks,
     slabs, dicts = _traffic(pipe, max_streams, n_active, kind)
     n_var = len(slabs)
     lat = []
+    spans = None
     srv = None
     if mode == "legacy":
         assert devices == 1, "legacy path predates the serving mesh"
@@ -291,22 +315,27 @@ def _bench_mode(mode, kind, pipe, params, max_streams, occupancy, n_ticks,
             if t >= WARMUP:
                 lat.append(time.perf_counter() - t0)
     elif mode == "fused":
+        # metrics=True: the per-tick latencies below come from the
+        # server's own kws_serve_tick_ms histogram (the registry IS
+        # the bookkeeping; the benchmark keeps no private timer list).
+        # The registry's cost is itself measured and gated by
+        # _bench_metrics_overhead — < 5% of a fused tick.
         srv = StreamingKWSServer(
             pipe, params, max_streams=max_streams, devices=devices,
-            tick_impl=tick_impl,
+            tick_impl=tick_impl, metrics=True,
         )
         for sid in range(n_active):
             srv.open_stream(sid)
         for t in range(WARMUP + n_ticks):
             slab, mask = slabs[t % n_var]
-            t0 = time.perf_counter()
             srv.step_batch(slab, mask)
-            if t >= WARMUP:
-                lat.append(time.perf_counter() - t0)
+        tick_hist = srv.metrics.histogram("kws_serve_tick_ms")
+        lat = [s * 1e-3 for s in list(tick_hist.samples)[WARMUP:]]
+        assert len(lat) == n_ticks
     elif mode == "pipelined":
         srv = StreamingKWSServer(
             pipe, params, max_streams=max_streams, devices=devices,
-            tick_impl=tick_impl,
+            tick_impl=tick_impl, metrics=True,
         )
         for sid in range(n_active):
             srv.open_stream(sid)
@@ -321,23 +350,27 @@ def _bench_mode(mode, kind, pipe, params, max_streams, occupancy, n_ticks,
             mask[:] = src_mask
             ing.commit()
         ing.drain()
-        t0 = time.perf_counter()
+        n0 = len(srv.metrics.traces)  # skip the warmup ticks' traces
         for t in range(n_ticks):
             src_slab, src_mask = slabs[t % n_var]
             slab, mask = ing.stage()
             slab[:] = src_slab
             mask[:] = src_mask
-            # meta = this tick's submit timestamp; its latency is the
-            # handle's retirement time minus it (submit-to-scores, the
-            # SLO-relevant number — ticks of one window share a
-            # retirement instant but not a submit instant)
-            ing.commit(meta=time.perf_counter())
-        handles = ing.drain()
-        wall = time.perf_counter() - t0
-        for h in handles:
-            metas = h.meta if isinstance(h.meta, list) else [h.meta]
-            lat.extend(h.done_at - m for m in metas)
+            ing.commit()
+        ing.drain()
+        # per-tick latency and throughput both come from the ingress's
+        # TickTrace spans (the registry replaces the old meta=
+        # perf_counter freight): submit-to-scores = commit -> retire
+        # per tick (ticks of one coalesced window share a retirement
+        # instant but not a commit instant), wall = first stage ->
+        # last retire over the measured ticks
+        traces = list(srv.metrics.traces)[n0:]
+        lat = [
+            tr.marks["retire"] - tr.marks["commit"] for tr in traces
+        ]
         assert len(lat) == n_ticks
+        wall = traces[-1].marks["retire"] - traces[0].marks["stage"]
+        spans = span_percentiles(traces)
     elif mode == "scan":
         srv = StreamingKWSServer(
             pipe, params, max_streams=max_streams, devices=devices,
@@ -395,7 +428,7 @@ def _bench_mode(mode, kind, pipe, params, max_streams, occupancy, n_ticks,
         wake = float(np.mean(srv.wake_rate[slots]))
     delta_cfg = pipe.config.delta
     casc_cfg = pipe.config.cascade
-    return {
+    row = {
         "classifier": pipe.config.classifier_key,
         "mode": mode,
         "kind": kind,
@@ -425,8 +458,24 @@ def _bench_mode(mode, kind, pipe, params, max_streams, occupancy, n_ticks,
         "wake_threshold": (
             None if casc_cfg is None else casc_cfg.wake_threshold
         ),
+        # counted (program, shape) retraces this row's server paid —
+        # exact jit accounting from the observability layer (None for
+        # the pre-telemetry legacy path)
+        "retraces": (
+            srv.retrace_count
+            if isinstance(srv, StreamingKWSServer) else None
+        ),
+        # pipelined rows: stage->commit->dispatch->retire span
+        # percentiles from the ingress's per-tick traces
+        "spans": spans,
         **stats,
     }
+    if isinstance(srv, StreamingKWSServer) and srv.metrics is not None:
+        _SNAPSHOTS[
+            (mode, pipe.config.classifier_key, kind, max_streams,
+             occupancy, devices)
+        ] = srv.metrics_snapshot()
+    return row
 
 
 # θ points of the sparsity-speedup block: θ=0 is the dense-equivalent
@@ -517,6 +566,69 @@ def _bench_sparsity_speedup(n_ticks):
 _TICK_DISPATCH_TIER = {
     "xla": "xla", "fused-pallas": "pallas", "fused-interpret": "interpret",
 }
+
+
+def _bench_metrics_overhead(n_ticks):
+    """Measured cost of `metrics=`: fused fv ticks, metrics-on vs -off.
+
+    Two servers on identical pipeline/params/traffic at 256 streams
+    full occupancy — one with a `MetricsRegistry`, one without — timed
+    by the SAME external wall clock (so the measurement itself is
+    symmetric), in interleaved rounds so transient host load hits both
+    configs alike; best-of-3 round means per config. The observability
+    contract gates ``overhead_frac`` (on/off - 1) < 5%: the registry
+    is two host clock reads and a couple of dict/deque updates per
+    tick, which must stay invisible next to a 256-stream device tick.
+    The metrics-on server's full `metrics_snapshot()` is returned
+    alongside and written to METRICS_serve.json.
+    """
+    pipe = _pipeline("qat")
+    params = pipe.init_params(jax.random.PRNGKey(0))
+    slabs, _ = _traffic(
+        pipe, OVERHEAD_STREAMS, OVERHEAD_STREAMS, "fv"
+    )
+    n_var = len(slabs)
+    servers = {
+        "off": StreamingKWSServer(
+            pipe, params, max_streams=OVERHEAD_STREAMS
+        ),
+        "on": StreamingKWSServer(
+            pipe, params, max_streams=OVERHEAD_STREAMS, metrics=True
+        ),
+    }
+    for srv in servers.values():
+        for sid in range(OVERHEAD_STREAMS):
+            srv.open_stream(sid)
+        for t in range(WARMUP):
+            srv.step_batch(*slabs[t % n_var])
+    means = {"off": [], "on": []}
+    for _round in range(3):
+        for name, srv in servers.items():
+            t0 = time.perf_counter()
+            for t in range(n_ticks):
+                srv.step_batch(*slabs[t % n_var])
+            means[name].append(
+                (time.perf_counter() - t0) / n_ticks
+            )
+    off = min(means["off"])
+    on = min(means["on"])
+    overhead = on / off - 1.0
+    block = {
+        "what": (
+            f"metrics-enabled fused tick costs < "
+            f"{OVERHEAD_BUDGET_FRAC:.0%} throughput over metrics-off "
+            f"at {OVERHEAD_STREAMS} streams (fv, qat, occupancy 1.0, "
+            f"devices=1; best-of-3 interleaved round means)"
+        ),
+        "streams": OVERHEAD_STREAMS,
+        "n_ticks": n_ticks,
+        "mean_ms_metrics_off": off * 1e3,
+        "mean_ms_metrics_on": on * 1e3,
+        "overhead_frac": overhead,
+        "budget_frac": OVERHEAD_BUDGET_FRAC,
+        "ok": overhead < OVERHEAD_BUDGET_FRAC,
+    }
+    return block, servers["on"].metrics_snapshot()
 
 
 def _auto_devices():
@@ -737,6 +849,11 @@ def run(classifiers=("qat", "integer", "delta"), devices=None, theta=0.25,
     # the tick-kernel's own claim: sparsity -> wall clock, fused tick vs
     # itself across θ (independent of the sweep's tick_impl choice)
     sparsity_speedup = _bench_sparsity_speedup(max(10, N_TICKS // 2))
+    # the observability layer's own claim: metrics cost < 5% of a
+    # fused tick (measured, recorded, and gated with the SLO)
+    metrics_overhead, overhead_snapshot = _bench_metrics_overhead(
+        N_TICKS
+    )
     payload = {
         "backend": jax.default_backend(),
         "frontend": frontend,
@@ -763,9 +880,22 @@ def run(classifiers=("qat", "integer", "delta"), devices=None, theta=0.25,
         "claim": claim,
         "slo": slo,
         "sparsity_speedup": sparsity_speedup,
+        "metrics_overhead": metrics_overhead,
     }
     with open("BENCH_serve.json", "w") as f:
         json.dump(payload, f, indent=2)
+    # full registry snapshots of the deployment-relevant points, as an
+    # artifact next to the BENCH rows (histogram buckets + percentiles,
+    # journal events, per-span rollups — the CI slow job uploads this)
+    snapshots = {"metrics_overhead_on": overhead_snapshot}
+    slo_key = ("pipelined", classifiers[0], "fv", 256, 1.0, 1)
+    if slo_key in _SNAPSHOTS:
+        snapshots["pipelined_256"] = _SNAPSHOTS[slo_key]
+    fused_key = ("fused", classifiers[0], "fv", 256, 1.0, 1)
+    if fused_key in _SNAPSHOTS:
+        snapshots["fused_256"] = _SNAPSHOTS[fused_key]
+    with open("METRICS_serve.json", "w") as f:
+        json.dump(snapshots, f, indent=2)
     for s in scaling:
         if s["devices"] > 1:
             print(
@@ -823,11 +953,26 @@ def run(classifiers=("qat", "integer", "delta"), devices=None, theta=0.25,
         f"{ss['speedup_vs_dense']:.2f}x its theta=0 self "
         f"(floor {SPEEDUP_FLOOR}x on accelerators)  {verdict}"
     )
+    mo = metrics_overhead
+    print(
+        f"serve_load metrics-overhead: metrics-on fused tick "
+        f"{mo['mean_ms_metrics_on']:.3f} ms vs off "
+        f"{mo['mean_ms_metrics_off']:.3f} ms at {mo['streams']} "
+        f"streams -> {mo['overhead_frac']:+.2%} "
+        f"(budget {mo['budget_frac']:.0%})  "
+        f"[{'PASS' if mo['ok'] else 'FAIL'}] "
+        f"(METRICS_serve.json written)"
+    )
     if fail_on_slo and (slo is None or not slo["ok"]):
         raise SystemExit(
             "serve_load: --fail-on-slo and the live-serving SLO gate "
             + ("produced no measurable rows" if slo is None
                else "failed (see the SLO line above)")
+        )
+    if fail_on_slo and not mo["ok"]:
+        raise SystemExit(
+            "serve_load: --fail-on-slo and the metrics-overhead gate "
+            "failed (see the metrics-overhead line above)"
         )
     return claim
 
@@ -864,8 +1009,10 @@ if __name__ == "__main__":
         "--fail-on-slo", action="store_true",
         help="exit non-zero when the live-serving SLO gate fails "
              "(pipelined p99 <= 16 ms at 256 streams AND >= 0.5x the "
-             "scan ceiling at 64/256 streams) — the CI slow job's "
-             "regression tripwire for the async ingress path",
+             "scan ceiling at 64/256 streams) or when the metrics-"
+             "overhead gate fails (metrics-on fused tick < 5% over "
+             "metrics-off) — the CI slow job's regression tripwire "
+             "for the async ingress and observability layers",
     )
     ap.add_argument(
         "--tick-impl", default="auto",

@@ -16,13 +16,22 @@ staging, non-blocking dispatch, deferred score fetch, and `--window`
 ticks coalesced per device dispatch — same score trajectory
 bit-identically, fewer host round-trips.
 
+`--metrics` serves through a `repro.serving.metrics.MetricsRegistry`
+(bit-identical — instrumentation is host-side only) and dumps the full
+`srv.metrics_snapshot()` JSON on exit; `--autoscale` drives an
+occupancy/SLO `Autoscaler` per tick and prints every capacity decision
+WITH its reason (`auto.last_decision`: occupancy_watermark, rejection,
+or an slo_veto hold).
+
   PYTHONPATH=src python examples/serve_streaming.py [--streams 32]
       [--frontend software] [--classifier qat|integer]
       [--cascade [--wake-threshold 0.1]] [--offline]
       [--pipelined [--window 4]] [--grow 64]
+      [--metrics] [--autoscale]
 """
 
 import argparse
+import json
 import sys
 import time
 
@@ -92,6 +101,20 @@ def main():
                          "open streams' state moves bitwise, so the "
                          "score trajectories are unaffected). Only in "
                          "the live blocking mode")
+    ap.add_argument("--metrics", action="store_true",
+                    help="serve through a MetricsRegistry "
+                         "(repro.serving.metrics — bit-identical, "
+                         "host-side instrumentation only) and dump the "
+                         "full metrics_snapshot() JSON on exit: tick "
+                         "latency histograms, occupancy gauges, "
+                         "retrace/compile counters, and the structured "
+                         "event journal")
+    ap.add_argument("--autoscale", action="store_true",
+                    help="drive an occupancy/SLO Autoscaler "
+                         "(repro.serving.autoscale) per live tick and "
+                         "print every capacity decision with its "
+                         "reason (auto.last_decision). Only in the "
+                         "live blocking mode")
     ap.add_argument("--devices", type=int, default=None,
                     help="shard the stream-slot axis over the first N "
                          "visible devices (('stream',) mesh; default: "
@@ -143,10 +166,23 @@ def main():
         while args.streams % n_dev:
             n_dev -= 1  # largest visible count the slot axis divides
     srv = StreamingKWSServer(
-        pipe, params, max_streams=args.streams, devices=n_dev
+        pipe, params, max_streams=args.streams, devices=n_dev,
+        metrics=args.metrics,
     )
     for sid in range(args.streams):
         srv.open_stream(sid)
+    auto = None
+    if args.autoscale:
+        from repro.serving.autoscale import Autoscaler, AutoscalePolicy
+
+        auto = Autoscaler(
+            srv,
+            AutoscalePolicy(
+                min_streams=srv.n_devices,
+                max_streams=4 * args.streams,
+                hysteresis_ticks=2, cooldown_ticks=4,
+            ),
+        )
 
     hop = pipe.chunk_samples  # 256 samples = 16 ms @ 16 kHz
     n_frames = min(audio.shape[1] // hop, int(args.seconds / 16e-3))
@@ -195,9 +231,21 @@ def main():
                       f"bitwise)")
             chunk = {sid: audio[sid, t * hop:(t + 1) * hop]
                      for sid in range(args.streams)}
+            t_tick = time.perf_counter()
             out = srv.step(chunk)
             for sid, r in out.items():
                 detections[sid] = r["top"]
+            if auto is not None:
+                # why did (or didn't) capacity change? last_decision
+                # carries the reason for grows, shrinks, AND slo-veto
+                # holds — print each decision as it lands
+                before = auto.last_decision
+                auto.observe(time.perf_counter() - t_tick)
+                d = auto.last_decision
+                if d is not None and d is not before:
+                    print(f"  [tick {t}] autoscaler {d['action']}: "
+                          f"{d['from']} -> {d['to']} slots "
+                          f"(reason: {d['reason']})")
     wall = time.time() - t0
     per_frame = wall / n_frames * 1e3
     rt_streams = args.streams * (16.0 / per_frame)
@@ -237,6 +285,13 @@ def main():
               f"cycle (wake rate) mean {np.mean(vals):.3f} "
               f"(min {np.min(vals):.3f} / max {np.max(vals):.3f}); "
               f"first streams: {shown}")
+    if args.metrics:
+        # the full observability snapshot: tick histograms (with exact
+        # percentiles), occupancy gauges, retrace/compile counters, and
+        # the structured event journal (every resize / retrace /
+        # autoscale decision with its reason, in order)
+        print("metrics snapshot:")
+        print(json.dumps(srv.metrics_snapshot(), indent=2))
     print("the IC serves 1 stream at 23 uW; TPU serving amortizes one "
           "weights-resident GRU across thousands of streams")
 

@@ -238,6 +238,17 @@ class Autoscaler:
                 so open streams always fit.
       * both  — only in multiples of the server's device count, never
                 within cooldown_ticks of the previous action.
+
+    History: every applied resize appends to `events` ({step, action,
+    from, to, reason}) and becomes `last_decision` — reason is
+    ``"rejection"`` or ``"occupancy_watermark"`` for grows,
+    ``"occupancy_watermark"`` for shrinks. A shrink the SLO vetoed is
+    recorded as `last_decision` (and journaled) with action
+    ``"hold"`` / reason ``"slo_veto"`` once per hysteresis trip, so
+    "why didn't it shrink?" is answerable. When the server carries a
+    `metrics=` registry, every decision (applied or vetoed) is also
+    journaled as an ``"autoscale"`` event with before/after capacity
+    and counted in ``kws_autoscale_decisions_total{action=...}``.
     """
 
     def __init__(self, server, policy: Optional[AutoscalePolicy] = None,
@@ -249,12 +260,14 @@ class Autoscaler:
         self.server = server
         self.policy = policy or AutoscalePolicy()
         self.monitor = monitor
+        self.metrics = getattr(server, "metrics", None)
         self._step = 0
         self._above = 0
         self._below = 0
         self._cooldown = 0
         self._rejections = 0
-        self.events: List[dict] = []  # {step, action, from, to}
+        self.events: List[dict] = []  # {step, action, from, to, reason}
+        self.last_decision: Optional[dict] = None
 
     @property
     def occupancy(self) -> float:
@@ -265,15 +278,33 @@ class Autoscaler:
         grow signal there is."""
         self._rejections += 1
 
-    def _resize(self, action: str, target: int) -> Optional[str]:
+    def _record(self, action: str, reason: str, frm: int,
+                to: int) -> dict:
+        decision = {
+            "step": self._step, "action": action, "from": frm,
+            "to": to, "reason": reason,
+        }
+        self.last_decision = decision
+        if self.metrics is not None:
+            self.metrics.journal.append(
+                "autoscale", step=self._step, action=action,
+                reason=reason, from_streams=frm, to_streams=to,
+                open_streams=len(self.server.active),
+            )
+            self.metrics.counter(
+                "kws_autoscale_decisions_total",
+                "autoscaler decisions by outcome",
+                action=action,
+            ).inc()
+        return decision
+
+    def _resize(self, action: str, target: int,
+                reason: str) -> Optional[str]:
         if target == self.server.max_streams:
             return None
         frm = self.server.max_streams
         self.server.resize(target)
-        self.events.append(
-            {"step": self._step, "action": action, "from": frm,
-             "to": target}
-        )
+        self.events.append(self._record(action, reason, frm, target))
         self._above = self._below = 0
         self._rejections = 0
         self._cooldown = self.policy.cooldown_ticks
@@ -301,19 +332,31 @@ class Autoscaler:
         n_dev = self.server.n_devices
         cap = self.server.max_streams
         if self._rejections or self._above >= pol.hysteresis_ticks:
+            reason = (
+                "rejection" if self._rejections
+                else "occupancy_watermark"
+            )
             target = min(cap * pol.factor, pol.max_streams)
             target -= target % n_dev
             if target > cap:
-                return self._resize("grow", target)
+                return self._resize("grow", target, reason)
             self._rejections = 0  # at the cap: nothing to do, stop
             return None           # re-firing every observation
         slo_unhealthy = slo_breach or self.monitor.consecutive > 0
-        if self._below >= pol.hysteresis_ticks and not slo_unhealthy:
+        if self._below >= pol.hysteresis_ticks:
+            if slo_unhealthy:
+                # record the veto once per hysteresis trip (the
+                # condition re-fires every low-occupancy tick; the
+                # FIRST qualifying one is the decision point)
+                if self._below == pol.hysteresis_ticks:
+                    self._record("hold", "slo_veto", cap, cap)
+                return None
             target = max(cap // pol.factor, pol.min_streams)
             # open streams must fit, in whole per-shard blocks
             floor = -(-len(self.server.active) // n_dev) * n_dev
             target = max(target, floor, n_dev)
             target -= target % n_dev
             if 0 < target < cap:
-                return self._resize("shrink", target)
+                return self._resize("shrink", target,
+                                    "occupancy_watermark")
         return None

@@ -69,27 +69,44 @@ class TickHandle:
 
     `meta` is caller-owned freight (e.g. a submit timestamp or the
     {stream_id: slot} map of a coalesced tick); `done_at` records the
-    host clock at the moment `result()` first returned, for SLO-style
-    latency accounting.
+    host clock at the EARLIEST moment the tick was observed complete —
+    the first `ready() == True` poll, or the end of the first
+    `result()` when nobody polled — for SLO-style latency accounting.
+    (It used to be stamped only inside `result()`, so a consumer that
+    polled `ready()` and fetched later recorded the fetch time, not
+    the completion time, inflating its submit-to-scores latency.)
+
+    `fetch_hist`, when given, is a `repro.serving.metrics.Histogram`
+    that receives the milliseconds the first `result()` spent blocked
+    materializing host arrays (the server wires its
+    ``kws_serve_tick_fetch_ms`` here when metrics are enabled).
     """
 
-    __slots__ = ("_scores", "_top", "_host", "meta", "done_at")
+    __slots__ = ("_scores", "_top", "_host", "meta", "done_at",
+                 "_fetch_hist", "_clock")
 
-    def __init__(self, scores, top, meta: Any = None):
+    def __init__(self, scores, top, meta: Any = None, fetch_hist=None,
+                 clock: Callable[[], float] = time.perf_counter):
         self._scores = scores
         self._top = top
         self._host: Optional[Tuple[np.ndarray, np.ndarray]] = None
         self.meta = meta
         self.done_at: Optional[float] = None
+        self._fetch_hist = fetch_hist
+        self._clock = clock
 
     def ready(self) -> bool:
-        """True when the tick has finished executing (non-blocking)."""
+        """True when the tick has finished executing (non-blocking).
+        The first True poll stamps `done_at`."""
         if self._host is not None:
             return True
         try:
-            return bool(self._scores.is_ready() and self._top.is_ready())
+            ok = bool(self._scores.is_ready() and self._top.is_ready())
         except AttributeError:  # non-jax array stand-ins
-            return True
+            ok = True
+        if ok and self.done_at is None:
+            self.done_at = self._clock()
+        return ok
 
     def result(self) -> Tuple[np.ndarray, np.ndarray]:
         """(scores (N, K), top (N,)) as owned host arrays; blocks until
@@ -97,9 +114,14 @@ class TickHandle:
         cached copy, so fetching a handle after further ticks (or slot
         resets) ran is always safe."""
         if self._host is None:
+            t0 = self._clock()
             self._host = (np.array(self._scores), np.array(self._top))
             self._scores = self._top = None
-            self.done_at = time.perf_counter()
+            t1 = self._clock()
+            if self.done_at is None:
+                self.done_at = t1
+            if self._fetch_hist is not None:
+                self._fetch_hist.observe((t1 - t0) * 1e3)
         return self._host
 
     @property
@@ -165,13 +187,37 @@ class PipelinedIngress:
         self._masks = [
             np.zeros((window, n), bool) for _ in range(depth)
         ]
-        # (buffer index, handle) in dispatch order; len <= depth
+        # (buffer index, handle, traces) in dispatch order; len <= depth
         self._fifo: collections.deque = collections.deque()
         self._retired: List[TickHandle] = []
         self._cursor = 0
         self._fill = 0  # ticks staged+committed into the cursor buffer
         self._metas: List[Any] = []
         self._staged = False
+        # observability rides the server's registry: one TickTrace per
+        # STAGED tick (stage -> commit -> dispatch -> retire marks; a
+        # window of K ticks shares the dispatch/retire timestamps of
+        # its one device call), plus in-flight / pending-window gauges.
+        # All host clock reads around the existing calls — operands and
+        # dispatch order are untouched, so the pipelined path stays
+        # bit-identical with metrics on.
+        self.metrics = getattr(server, "metrics", None)
+        self._seq = 0
+        self._cur_trace = None
+        self._traces: List[Any] = []  # committed, awaiting dispatch
+        if self.metrics is not None:
+            self._m_in_flight = self.metrics.gauge(
+                "kws_ingress_in_flight",
+                "device dispatches in flight (<= depth)",
+            )
+            self._m_pending = self.metrics.gauge(
+                "kws_ingress_pending_ticks",
+                "ticks committed into the current window, undispatched",
+            )
+            self._m_dispatches = self.metrics.counter(
+                "kws_ingress_dispatches_total",
+                "device dispatches issued by the pipelined ingress",
+            )
 
     @property
     def in_flight(self) -> int:
@@ -217,10 +263,13 @@ class PipelinedIngress:
             # consumed it (if any) is the FIFO front — buffers cycle
             # round-robin and retire in dispatch order
             while self._fifo and self._fifo[0][0] == i:
-                _, h = self._fifo.popleft()
-                h.result()
-                self._retired.append(h)
+                self._retire(*self._fifo.popleft()[1:])
         self._staged = True
+        if self.metrics is not None:
+            tr = self.metrics.trace(("tick", self._seq))
+            self._seq += 1
+            tr.mark("stage")
+            self._cur_trace = tr
         mask = self._masks[i][self._fill]
         mask[:] = False
         return self._slabs[i][self._fill], mask
@@ -233,6 +282,11 @@ class PipelinedIngress:
             raise RuntimeError("commit() without a prior stage()")
         self._staged = False
         self._metas.append(meta)
+        if self._cur_trace is not None:
+            self._cur_trace.mark("commit")
+            self._traces.append(self._cur_trace)
+            self._cur_trace = None
+            self._m_pending.set(self._fill + 1)
         self._fill += 1
         if self._fill == self.window:
             return self._dispatch()
@@ -260,11 +314,32 @@ class PipelinedIngress:
                 self._slabs[i][:k], self._masks[i][:k]
             )
             handle.meta = list(self._metas)
-        self._fifo.append((i, handle))
+        traces, self._traces = self._traces, []
+        if traces:
+            # one device call serves the whole window: its ticks share
+            # the dispatch timestamp (and, at retire, done_at)
+            t = self.metrics.clock()
+            for tr in traces:
+                tr.mark("dispatch", t)
+        if self.metrics is not None:
+            self._m_dispatches.inc()
+            self._m_in_flight.set(len(self._fifo) + 1)
+            self._m_pending.set(0)
+        self._fifo.append((i, handle, traces))
         self._cursor = (i + 1) % self.depth
         self._fill = 0
         self._metas = []
         return handle
+
+    def _retire(self, h: TickHandle, traces) -> None:
+        """Force one in-flight dispatch to completion and collect it."""
+        h.result()
+        if traces:
+            for tr in traces:
+                tr.mark("retire", h.done_at)
+        if self.metrics is not None:
+            self._m_in_flight.set(len(self._fifo))
+        self._retired.append(h)
 
     def retired(self) -> List[TickHandle]:
         """Handles forced to completion so far, in dispatch order
@@ -278,9 +353,7 @@ class PipelinedIngress:
         just-drained), in dispatch order."""
         self.flush()
         while self._fifo:
-            _, h = self._fifo.popleft()
-            h.result()
-            self._retired.append(h)
+            self._retire(*self._fifo.popleft()[1:])
         return self.retired()
 
 
@@ -331,6 +404,11 @@ class TickCoalescer:
         self._ingress: Dict[int, PipelinedIngress] = {}
         self._pending = None  # (ingress, slab, mask, CoalescedTick, deadline)
         self._retired: List[TickHandle] = []
+        # per-reason flush counters on the server's registry: "full"
+        # (every open stream submitted), "deadline" (window_ms passed),
+        # "second_frame" (a stream's next-tick frame forced the flush),
+        # "manual" (caller flush()/drain())
+        self.metrics = getattr(server, "metrics", None)
 
     @property
     def pending_streams(self) -> int:
@@ -356,7 +434,7 @@ class TickCoalescer:
             )
         if self._pending is not None and stream_id in self._pending[3].sids:
             # a stream's second frame belongs to the NEXT tick
-            self.flush(now)
+            self._flush("second_frame", now)
         if self._pending is None:
             ing = self._ingress.get(dim)
             if ing is None:
@@ -371,7 +449,7 @@ class TickCoalescer:
         mask[slot] = True
         meta.sids[stream_id] = slot
         if len(meta.sids) >= len(self.server.active):
-            self.flush(now)
+            self._flush("full", now)
         return self.retired()
 
     def poll(self, now: Optional[float] = None) -> List[TickHandle]:
@@ -379,11 +457,15 @@ class TickCoalescer:
         handles retired so far either way."""
         now = self.clock() if now is None else now
         if self._pending is not None and now >= self._pending[4]:
-            self.flush(now)
+            self._flush("deadline", now)
         return self.retired()
 
     def flush(self, now: Optional[float] = None) -> Optional[TickHandle]:
         """Dispatch the pending window as one tick (no-op when empty)."""
+        return self._flush("manual", now)
+
+    def _flush(self, reason: str, now: Optional[float] = None
+               ) -> Optional[TickHandle]:
         if self._pending is None:
             return None
         now = self.clock() if now is None else now
@@ -391,6 +473,12 @@ class TickCoalescer:
         self._pending = None
         meta.flushed_at = now
         handle = ing.commit(meta=meta)
+        if self.metrics is not None:
+            self.metrics.counter(
+                "kws_coalescer_flushes_total",
+                "coalesced-tick flushes by trigger",
+                reason=reason,
+            ).inc()
         self._retired.extend(ing.retired())
         return handle
 

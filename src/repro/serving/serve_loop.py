@@ -91,6 +91,7 @@ from repro.distributed.sharding import (
 from repro.models.registry import get_backbone
 from repro.serving.autoscale import StreamRouter
 from repro.serving.ingress import TickHandle
+from repro.serving.metrics import MetricsRegistry
 
 Pytree = Any
 
@@ -368,11 +369,33 @@ class StreamingKWSServer:
     fused-pallas on TPU, xla elsewhere). All choices are bit-identical
     for every backend; the resolved choice and its kernel dispatch tier
     are exposed as `srv.tick_impl` / `srv.tick_dispatch`.
+
+    Observability: ``metrics=`` takes a
+    `repro.serving.metrics.MetricsRegistry` (or ``True`` for a fresh
+    default one, exposed as `srv.metrics`) and instruments the server:
+    tick dispatch / fetch latency histograms keyed on the 16 ms budget,
+    tick / retrace / compile counters, occupancy gauges, and a
+    structured journal event for every compile, shape-keyed retrace,
+    resize, and shard-loss recovery. Everything is host-side clock
+    reads around the existing calls — the device operands, programs,
+    and dispatch order are untouched, so a metrics-enabled server is
+    BIT-identical to a metrics-off one (tests/test_metrics.py).
+    `srv.metrics_snapshot()` rolls the registry plus the server-level
+    telemetry (`sparsity` / `wake_rate` means over open slots — host
+    reads of existing counters, taken at snapshot time, never on the
+    tick path) into one JSON-able dict. Retrace/compile counts are
+    tracked even with metrics off (`srv.retrace_count` /
+    `srv.compile_count`): a "retrace" is the first dispatch of a
+    (program, operand-shape) pair since the programs were last rebuilt
+    — exactly the ticks that pay jax's trace+compile cost, e.g. the
+    first tick after a `resize` to a not-yet-seen capacity (resizing
+    BACK to a seen capacity hits jax's cache and counts nothing).
     """
 
     def __init__(self, pipeline, params, max_streams: int = 256,
                  smoothing: float = 0.7, state=None, mesh=None,
-                 devices: Optional[int] = None, tick_impl: str = "auto"):
+                 devices: Optional[int] = None, tick_impl: str = "auto",
+                 metrics=None):
         if mesh is not None and devices is not None:
             raise ValueError("pass mesh= or devices=, not both")
         if tick_impl not in _TICK_IMPLS:
@@ -474,6 +497,59 @@ class StreamingKWSServer:
         # to the lowest-free-slot order of the pre-sharding free list
         # when n_shards == 1)
         self.router = StreamRouter(max_streams, self.n_devices)
+        # retrace/compile accounting is always on (it is two ints and a
+        # set — the benchmarks' exact compile-tick exclusion needs it
+        # with metrics off too); the registry mirrors are optional
+        self._retraces = 0
+        self._compiles = 0
+        self._tick_shapes: set = set()
+        # metrics: True -> fresh default registry, an existing
+        # MetricsRegistry -> shared, any falsy value (None/False) -> off
+        if metrics is True:
+            metrics = MetricsRegistry()
+        elif not metrics:
+            metrics = None
+        self.metrics: Optional[MetricsRegistry] = metrics
+        if metrics is not None:
+            self._m_ticks = metrics.counter(
+                "kws_serve_ticks_total",
+                "fused serving ticks dispatched (scanned windows count "
+                "each scanned tick)",
+            )
+            self._m_retraces = metrics.counter(
+                "kws_serve_retraces_total",
+                "dispatches that traced+compiled a new (program, "
+                "operand shape) — the ticks that pay jit cost",
+            )
+            self._m_compiles = metrics.counter(
+                "kws_serve_compile_programs_total",
+                "full program rebuilds (construction and mesh changes)",
+            )
+            self._m_dispatch = metrics.histogram(
+                "kws_serve_tick_dispatch_ms",
+                "host time to dispatch one tick (or one coalesced "
+                "window) — slab handoff to handle return, fetch "
+                "excluded",
+            )
+            self._m_fetch = metrics.histogram(
+                "kws_serve_tick_fetch_ms",
+                "host time blocked in TickHandle.result() fetching "
+                "scores to host",
+            )
+            self._m_tick = metrics.histogram(
+                "kws_serve_tick_ms",
+                "synchronous step_batch wall time (dispatch + fetch)",
+            )
+            self._m_open = metrics.gauge(
+                "kws_serve_open_streams", "streams currently open"
+            )
+            self._m_cap = metrics.gauge(
+                "kws_serve_capacity", "stream-slot capacity"
+            )
+            self._m_occ = metrics.gauge(
+                "kws_serve_occupancy", "open streams / capacity"
+            )
+        self._update_occupancy_gauges()
         self._compile_programs()
 
     def _compile_programs(self):
@@ -494,6 +570,18 @@ class StreamingKWSServer:
         keyed cache) and toggling between capacities reuses already-
         compiled programs instead of rebuilding them every resize.
         """
+        # new wrappers mean every previously seen operand shape will
+        # trace+compile again — reset the retrace tracking to match
+        self._tick_shapes.clear()
+        self._compiles += 1
+        if self.metrics is not None:
+            self._m_compiles.inc()
+            self.metrics.journal.append(
+                "compile_programs",
+                n_devices=self.n_devices,
+                max_streams=self.max_streams,
+                tick_impl=self.tick_impl,
+            )
         mesh, pipeline = self.mesh, self.pipeline
         if mesh is None:
             jit_kw = dict(donate_argnums=(1,))
@@ -555,6 +643,94 @@ class StreamingKWSServer:
         # valid however late it is fetched. Shardings are inherited
         # from the inputs, so the same program serves the mesh path.
         self._own = jax.jit(lambda s, t: (jnp.copy(s), jnp.copy(t)))
+
+    # ---- observability ----
+
+    @property
+    def retrace_count(self) -> int:
+        """Dispatches so far that traced+compiled a new (program,
+        operand shape) pair — i.e. the ticks that paid jit cost. The
+        first tick after construction counts (it compiles), as does
+        the first tick after a `resize` to a capacity this program set
+        has not served yet; a resize back to a seen capacity hits
+        jax's shape-keyed cache and does not. Rebuilt programs
+        (`_compile_programs`) reset the seen-shape tracking, so the
+        first post-recovery tick counts again. Tracked with metrics
+        off too — `benchmarks/churn_load.py` keys its exact
+        compile-tick exclusion on this."""
+        return self._retraces
+
+    @property
+    def compile_count(self) -> int:
+        """Full program rebuilds so far (1 after construction; +1 per
+        mesh change, i.e. `recover_shard_loss`)."""
+        return self._compiles
+
+    def _note_dispatch(self, program: str, shape) -> None:
+        """Record one dispatch of `program` at `shape`: the first
+        (program, shape) since the last `_compile_programs` is a
+        retrace (jax traces+compiles under this very call)."""
+        key = (program, tuple(int(d) for d in shape))
+        if key in self._tick_shapes:
+            return
+        self._tick_shapes.add(key)
+        self._retraces += 1
+        if self.metrics is not None:
+            self._m_retraces.inc()
+            self.metrics.journal.append(
+                "retrace", program=program, shape=list(key[1]),
+                max_streams=self.max_streams,
+            )
+
+    def _update_occupancy_gauges(self) -> None:
+        if self.metrics is None:
+            return
+        n = len(self.active)
+        self._m_open.set(n)
+        self._m_cap.set(self.max_streams)
+        self._m_occ.set(n / self.max_streams if self.max_streams else 0.0)
+
+    def metrics_snapshot(self) -> Dict[str, Any]:
+        """One JSON-able dict of everything observable about the server.
+
+        ``server`` block: identity (tick_impl / dispatch tier / mesh
+        size), capacity and occupancy, retrace/compile counts, and the
+        per-backend telemetry rollups — mean `sparsity` (ΔGRU
+        effective-MAC fraction) and `wake_rate` (cascade duty cycle)
+        over the OPEN slots (None with no streams open). Those two
+        read device state (a host sync), which is fine here: snapshots
+        happen off the tick path. With `metrics=` enabled the registry
+        snapshot (counters / gauges / histograms with percentiles,
+        journal, trace span rollups) is merged in; with metrics off
+        only the server block is returned.
+
+        `json.dumps(srv.metrics_snapshot())` always succeeds and
+        round-trips equal (tests/test_metrics.py).
+        """
+        slots = sorted(self.active.values())
+        server: Dict[str, Any] = {
+            "tick_impl": self.tick_impl,
+            "tick_dispatch": self.tick_dispatch,
+            "n_devices": self.n_devices,
+            "max_streams": self.max_streams,
+            "open_streams": len(self.active),
+            "occupancy": (
+                len(self.active) / self.max_streams
+                if self.max_streams else 0.0
+            ),
+            "retraces": self._retraces,
+            "compiles": self._compiles,
+            "sparsity_mean": (
+                float(np.mean(self.sparsity[slots])) if slots else None
+            ),
+            "wake_rate_mean": (
+                float(np.mean(self.wake_rate[slots])) if slots else None
+            ),
+        }
+        snap: Dict[str, Any] = {"server": server}
+        if self.metrics is not None:
+            snap.update(self.metrics.snapshot())
+        return snap
 
     # ---- compatibility views of the fused state ----
 
@@ -657,6 +833,7 @@ class StreamingKWSServer:
         # The slot index is traced (and replicated on a mesh), so
         # open/close never recompiles and works across shard boundaries.
         self.state = self._reset(self.state, jnp.int32(slot))
+        self._update_occupancy_gauges()
 
     def close_stream(self, stream_id: int):
         # validate before touching the router: a raw KeyError from
@@ -666,6 +843,7 @@ class StreamingKWSServer:
             raise ValueError(f"stream {stream_id} not open")
         slot = self.active.pop(stream_id)
         self.router.release(slot)
+        self._update_occupancy_gauges()
 
     # ---- elastic capacity: live resize & shard-loss recovery ----
 
@@ -760,7 +938,15 @@ class StreamingKWSServer:
             sid: mapping[slot] for sid, slot in self.active.items()
         }
         self.router = router
-        self.max_streams = new_max_streams
+        old_max, self.max_streams = self.max_streams, new_max_streams
+        if self.metrics is not None:
+            self.metrics.journal.append(
+                "resize", from_streams=old_max,
+                to_streams=new_max_streams,
+                open_streams=len(self.active),
+                n_devices=self.n_devices,
+            )
+        self._update_occupancy_gauges()
 
     def recover_shard_loss(self, lost_shard: int) -> Dict[str, Any]:
         """Shrink-reshard after losing one shard's device.
@@ -829,6 +1015,7 @@ class StreamingKWSServer:
         new_host = self._relay_state(
             host, new_max, occupied, [mapping[s] for s in occupied]
         )
+        old_devices, old_max = self.n_devices, self.max_streams
         self.mesh = new_mesh
         self.n_devices = new_n
         self.max_streams = new_max
@@ -862,6 +1049,16 @@ class StreamingKWSServer:
             self.active[sid] = slot
             self.state = self._reset(self.state, jnp.int32(slot))
             reopened.append(sid)
+        if self.metrics is not None:
+            self.metrics.journal.append(
+                "shard_loss",
+                lost_shard=lost_shard,
+                from_devices=old_devices, to_devices=new_n,
+                from_streams=old_max, to_streams=new_max,
+                reopened=list(reopened),
+                survivors=sorted(survivors),
+            )
+        self._update_occupancy_gauges()
         return {
             "lost_shard": lost_shard,
             "n_devices": new_n,
@@ -930,7 +1127,13 @@ class StreamingKWSServer:
         The arrays are OWNED copies (never views of donation-bound
         buffers): this is `step_batch_async` fetched immediately.
         """
-        return self.step_batch_async(slab, mask).result()
+        m = self.metrics
+        if m is None:
+            return self.step_batch_async(slab, mask).result()
+        t0 = m.clock()
+        out = self.step_batch_async(slab, mask).result()
+        self._m_tick.observe((m.clock() - t0) * 1e3)
+        return out
 
     def step_batch_async(self, slab, mask) -> TickHandle:
         """Non-blocking tick: dispatch and return a deferred handle.
@@ -957,16 +1160,30 @@ class StreamingKWSServer:
         `jnp.asarray` staging hop here measured ~0.35 ms/tick extra on
         a single-core host, most of the live-vs-scan dispatch gap.
         """
-        tick = (
-            self._tick_audio
-            if self._is_raw(int(np.shape(slab)[-1]))
-            else self._tick_fv
+        raw = self._is_raw(int(np.shape(slab)[-1]))
+        tick = self._tick_audio if raw else self._tick_fv
+        self._note_dispatch(
+            "tick_audio" if raw else "tick_fv", np.shape(slab)
         )
+        m = self.metrics
+        if m is None:
+            self.state, scores, top = tick(
+                self.params, self.state, slab, mask,
+                self.frontend_state, self.smoothing,
+            )
+            return TickHandle(*self._own(scores, top))
+        t0 = m.clock()
         self.state, scores, top = tick(
             self.params, self.state, slab, mask,
             self.frontend_state, self.smoothing,
         )
-        return TickHandle(*self._own(scores, top))
+        handle = TickHandle(
+            *self._own(scores, top), fetch_hist=self._m_fetch,
+            clock=m.clock,
+        )
+        self._m_ticks.inc()
+        self._m_dispatch.observe((m.clock() - t0) * 1e3)
+        return handle
 
     def step(self, frames: Dict[int, np.ndarray]) -> Dict[int, dict]:
         """frames: stream_id -> FV_Norm (C,) or raw audio hop (S,).
@@ -1019,16 +1236,30 @@ class StreamingKWSServer:
         correctness story. Same owned-copy fetch discipline as
         `step_batch_async`.
         """
-        run = (
-            self._run_audio
-            if self._is_raw(int(np.shape(slab)[-1]))
-            else self._run_fv
+        raw = self._is_raw(int(np.shape(slab)[-1]))
+        run = self._run_audio if raw else self._run_fv
+        self._note_dispatch(
+            "run_audio" if raw else "run_fv", np.shape(slab)
         )
+        m = self.metrics
+        if m is None:
+            self.state, scores_seq, tops = run(
+                self.params, self.state, slab, mask,
+                self.frontend_state, self.smoothing,
+            )
+            return TickHandle(*self._own(scores_seq, tops))
+        t0 = m.clock()
         self.state, scores_seq, tops = run(
             self.params, self.state, slab, mask,
             self.frontend_state, self.smoothing,
         )
-        return TickHandle(*self._own(scores_seq, tops))
+        handle = TickHandle(
+            *self._own(scores_seq, tops), fetch_hist=self._m_fetch,
+            clock=m.clock,
+        )
+        self._m_ticks.inc(int(np.shape(slab)[0]))
+        self._m_dispatch.observe((m.clock() - t0) * 1e3)
+        return handle
 
     def run(self, buffers: Dict[int, np.ndarray]) -> Dict[int, dict]:
         """Offline replay: buffered audio -> per-tick posteriors, scanned.

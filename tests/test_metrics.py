@@ -1,0 +1,681 @@
+"""Observability layer: bit-identity gate + registry/journal/trace unit
+behavior.
+
+The contract of `repro.serving.metrics` is that telemetry is free of
+numerical side effects: every instrument is a host-side clock read or
+dict update AROUND an existing call — device operands, jitted programs,
+and dispatch order are untouched. This suite proves the hard gate with
+`np.testing.assert_array_equal` (never allclose): a metrics-enabled
+`StreamingKWSServer` is BIT-identical to a metrics-off twin for every
+classifier backend ("float" / "qat" / "integer" / "delta" /
+"delta-int"), sync and async (deferred handles + scan windows), with
+the stage-1 cascade gating the tick, and on the 8-emulated-device
+("stream",) mesh (tests/conftest.py forces the platform).
+
+Unit coverage around the gate:
+
+  * `Histogram` bucket-edge semantics — Prometheus ``le``: a value
+    exactly ON an edge lands in that edge's bucket, above the last edge
+    in the implicit +Inf bucket; exact percentiles over the retained
+    sample window.
+  * `EventJournal` — ``seq`` stays monotonic across drop-oldest trims;
+    the server's journal orders "resize" / "compile_programs" /
+    "shard_loss" events the way the control flow actually ran.
+  * `Autoscaler` — `last_decision` carries the reason ("rejection",
+    "occupancy_watermark", "slo_veto"), vetoes are journaled once per
+    hysteresis trip, and the server's "resize" event lands before the
+    "autoscale" decision that caused it.
+  * `metrics_snapshot()` JSON round-trips equal; `render_prometheus()`
+    emits parseable text exposition with cumulative buckets whose +Inf
+    count equals ``_count``.
+  * `TickHandle.done_at` regression — stamped on the FIRST
+    ``ready() == True`` poll, not first observed at `result()`.
+"""
+
+import json
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quant
+from repro.core.fex import fit_norm_stats
+from repro.core.pipeline import KWSPipeline, KWSPipelineConfig
+from repro.distributed.fault_tolerance import StragglerMonitor
+from repro.serving.autoscale import Autoscaler, AutoscalePolicy
+from repro.serving.cascade import CascadeConfig
+from repro.serving.ingress import PipelinedIngress, TickCoalescer
+from repro.serving.metrics import (
+    Counter,
+    EventJournal,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    TickTrace,
+    span_percentiles,
+)
+from repro.serving.serve_loop import StreamingKWSServer
+
+N_DEV = len(jax.devices())
+MESH_DEV = (
+    max(d for d in (2, 4, 8) if d <= min(8, N_DEV)) if N_DEV >= 2 else 1
+)
+MAX_STREAMS = 8
+CLASSIFIERS = ("float", "qat", "integer", "delta", "delta-int")
+
+
+@pytest.fixture(scope="module")
+def norm_stats():
+    rng = np.random.default_rng(0)
+    audio = jnp.asarray(
+        rng.standard_normal((4, 16000)).astype(np.float32) * 0.05
+    )
+    boot = KWSPipeline(KWSPipelineConfig(use_norm=False))
+    _, raw = boot.features(audio)
+    return fit_norm_stats(quant.log_compress_lut(raw, 12, 10))
+
+
+@pytest.fixture(scope="module", params=CLASSIFIERS)
+def backend(request, norm_stats):
+    """(pipeline, params) per classifier backend, built once."""
+    pipe = KWSPipeline(
+        KWSPipelineConfig(classifier=request.param), norm_stats=norm_stats
+    )
+    return pipe, pipe.init_params(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def qat_backend(norm_stats):
+    pipe = KWSPipeline(
+        KWSPipelineConfig(classifier="qat"), norm_stats=norm_stats
+    )
+    return pipe, pipe.init_params(jax.random.PRNGKey(3))
+
+
+def _ticks(pipe, n, kind="fv", seed=0, n_streams=MAX_STREAMS):
+    """n random (slab, mask) tick operands with partial masks."""
+    rng = np.random.default_rng(seed)
+    dim = (
+        pipe.chunk_samples if kind == "audio"
+        else pipe.config.fex.num_channels
+    )
+    out = []
+    for _ in range(n):
+        slab = rng.standard_normal(
+            (n_streams, dim)
+        ).astype(np.float32) * 0.05
+        mask = rng.random(n_streams) > 0.25
+        out.append((slab, mask))
+    return out
+
+
+def _twin_servers(pipe, params, devices=1, max_streams=MAX_STREAMS,
+                  n_open=None):
+    """(metrics-on, metrics-off) servers with the same open streams."""
+    on = StreamingKWSServer(
+        pipe, params, max_streams=max_streams, devices=devices,
+        metrics=True,
+    )
+    off = StreamingKWSServer(
+        pipe, params, max_streams=max_streams, devices=devices
+    )
+    for sid in range(max_streams if n_open is None else n_open):
+        on.open_stream(sid)
+        off.open_stream(sid)
+    return on, off
+
+
+def _assert_states_identical(a, b):
+    la = [np.asarray(x) for x in jax.tree_util.tree_leaves(a.state)]
+    lb = [np.asarray(x) for x in jax.tree_util.tree_leaves(b.state)]
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(x, y)
+
+
+# --------------------------------------------------------------------------
+# the hard gate: metrics on == metrics off, bitwise
+# --------------------------------------------------------------------------
+
+def test_metrics_bit_identical_all_backends(backend):
+    """Sync ticks, deferred async handles, and a run_batch_async scan
+    window on a metrics-enabled server bit-match a metrics-off twin —
+    scores, top indices, and every ServerState leaf — for fv and
+    raw-audio ticks alike."""
+    pipe, params = backend
+    on, off = _twin_servers(pipe, params)
+    sync = _ticks(pipe, 3, "fv", seed=1) + _ticks(pipe, 2, "audio", seed=2)
+    for slab, mask in sync:
+        gs, gt = on.step_batch(slab, mask)
+        rs, rt = off.step_batch(slab, mask)
+        np.testing.assert_array_equal(gs, rs)
+        np.testing.assert_array_equal(gt, rt)
+    # async: every handle fetched after the last dispatch
+    deferred = _ticks(pipe, 4, "fv", seed=3)
+    handles = [on.step_batch_async(s, m) for s, m in deferred]
+    ref = [off.step_batch(s, m) for s, m in deferred]
+    for h, (rs, rt) in zip(handles, ref):
+        gs, gt = h.result()
+        np.testing.assert_array_equal(gs, rs)
+        np.testing.assert_array_equal(gt, rt)
+    # coalesced window: one scan dispatch vs per-tick reference
+    window = _ticks(pipe, 3, "fv", seed=4)
+    wh = on.run_batch_async(
+        np.stack([s for s, _ in window]), np.stack([m for _, m in window])
+    )
+    wref = [off.step_batch(s, m) for s, m in window]
+    scores_seq, tops = wh.result()
+    for t, (rs, rt) in enumerate(wref):
+        np.testing.assert_array_equal(scores_seq[t], rs)
+        np.testing.assert_array_equal(tops[t], rt)
+    _assert_states_identical(on, off)
+    # the registry actually observed the work it didn't perturb
+    assert on.metrics.counter("kws_serve_ticks_total").value > 0
+    assert on.metrics.histogram("kws_serve_tick_ms").count == len(sync)
+
+
+@pytest.mark.parametrize("wake_threshold", [0.0, 0.3])
+def test_metrics_bit_identical_cascaded(norm_stats, wake_threshold):
+    """The stage-1 wake gate's frozen-state holds are untouched by
+    instrumentation: cascaded metrics-on == cascaded metrics-off,
+    including the wake duty-cycle telemetry itself."""
+    pipe = KWSPipeline(
+        KWSPipelineConfig(
+            classifier="qat",
+            cascade=CascadeConfig(
+                wake_threshold=wake_threshold, hangover_frames=1
+            ),
+        ),
+        norm_stats=norm_stats,
+    )
+    params = pipe.init_params(jax.random.PRNGKey(5))
+    on, off = _twin_servers(pipe, params)
+    for slab, mask in _ticks(pipe, 6, "fv", seed=5):
+        gs, gt = on.step_batch(slab, mask)
+        rs, rt = off.step_batch(slab, mask)
+        np.testing.assert_array_equal(gs, rs)
+        np.testing.assert_array_equal(gt, rt)
+    _assert_states_identical(on, off)
+    np.testing.assert_array_equal(on.wake_rate, off.wake_rate)
+
+
+@pytest.mark.skipif(
+    N_DEV < 2,
+    reason="needs a multi-device platform (conftest forces 8 emulated "
+    "CPU devices unless XLA_FLAGS overrides it)",
+)
+def test_metrics_bit_identical_sharded(backend):
+    """Metrics-on == metrics-off on the ("stream",) mesh: sharded
+    dispatch, sharded score fetches, deferred handles."""
+    pipe, params = backend
+    ms = 2 * MESH_DEV
+    on, off = _twin_servers(
+        pipe, params, devices=MESH_DEV, max_streams=ms
+    )
+    ticks = _ticks(pipe, 4, "fv", seed=7, n_streams=ms)
+    handles = [on.step_batch_async(s, m) for s, m in ticks]
+    ref = [off.step_batch(s, m) for s, m in ticks]
+    for h, (rs, rt) in zip(handles, ref):
+        gs, gt = h.result()
+        np.testing.assert_array_equal(gs, rs)
+        np.testing.assert_array_equal(gt, rt)
+    _assert_states_identical(on, off)
+
+
+def test_metrics_bit_identical_pipelined_ingress(qat_backend):
+    """The traced PipelinedIngress (span marks, queue gauges) retires
+    the same bits as an uninstrumented one."""
+    pipe, params = qat_backend
+    on, off = _twin_servers(pipe, params)
+    dim = pipe.config.fex.num_channels
+    ing_on = PipelinedIngress(on, dim, depth=2)
+    ing_off = PipelinedIngress(off, dim, depth=2)
+    for s, m in _ticks(pipe, 6, "fv", seed=9):
+        for ing in (ing_on, ing_off):
+            slab, mask = ing.stage()
+            slab[:] = s
+            mask[:] = m
+            ing.commit()
+    for ha, hb in zip(ing_on.drain(), ing_off.drain()):
+        np.testing.assert_array_equal(ha.scores, hb.scores)
+        np.testing.assert_array_equal(ha.top, hb.top)
+    _assert_states_identical(on, off)
+
+
+# --------------------------------------------------------------------------
+# Histogram / Counter / Gauge unit behavior
+# --------------------------------------------------------------------------
+
+def test_histogram_bucket_edges_le_inclusive():
+    """Prometheus le semantics: v strictly below an edge and v exactly
+    ON the edge both land in that edge's bucket; above the last edge is
+    the implicit +Inf bucket."""
+    h = Histogram(buckets=(1.0, 2.0, 4.0))
+    for v, bucket in [
+        (0.5, 0), (1.0, 0),   # on-edge -> that edge's bucket
+        (1.5, 1), (2.0, 1),
+        (4.0, 2),
+        (4.0001, 3), (100.0, 3),  # past the last edge -> +Inf
+    ]:
+        before = list(h.counts)
+        h.observe(v)
+        assert h.counts[bucket] == before[bucket] + 1, (v, bucket)
+    assert h.counts == [2, 2, 1, 2]
+    assert h.count == 7
+    assert h.last == 100.0
+    np.testing.assert_allclose(h.sum, 0.5 + 1.0 + 1.5 + 2.0 + 4.0
+                               + 4.0001 + 100.0)
+    p = h.percentiles()
+    assert p["max"] == 100.0 and p["p50"] == 2.0
+
+
+def test_histogram_validation_and_sample_window():
+    with pytest.raises(ValueError, match="ascending"):
+        Histogram(buckets=(2.0, 1.0))
+    with pytest.raises(ValueError, match="ascending"):
+        Histogram(buckets=(1.0, 1.0))  # strictly ascending
+    with pytest.raises(ValueError, match="ascending"):
+        Histogram(buckets=())
+    h = Histogram(buckets=(10.0,), keep_samples=4)
+    assert h.last is None and h.percentiles() is None
+    for v in [1.0, 2.0, 3.0, 4.0, 5.0, 6.0]:
+        h.observe(v)
+    # bucket counts cover all 6; percentiles only the retained last 4
+    assert h.count == 6
+    assert list(h.samples) == [3.0, 4.0, 5.0, 6.0]
+    assert h.percentiles()["max"] == 6.0
+
+
+def test_counter_monotonic_and_gauge():
+    c = Counter()
+    c.inc()
+    c.inc(3)
+    assert c.value == 4
+    with pytest.raises(ValueError, match=">= 0"):
+        c.inc(-1)
+    g = Gauge()
+    g.set(7)
+    assert g.value == 7.0 and isinstance(g.value, float)
+
+
+def test_registry_get_or_create_and_kind_conflict():
+    reg = MetricsRegistry()
+    c1 = reg.counter("x_total", "help")
+    assert reg.counter("x_total") is c1
+    with pytest.raises(ValueError, match="already registered"):
+        reg.gauge("x_total")
+    # label sets create distinct children under one family
+    a = reg.counter("y_total", reason="full")
+    b = reg.counter("y_total", reason="deadline")
+    assert a is not b
+    assert reg.counter("y_total", reason="full") is a
+
+
+# --------------------------------------------------------------------------
+# EventJournal: seq monotonic past trims; server event ordering
+# --------------------------------------------------------------------------
+
+def test_journal_seq_monotonic_across_trim():
+    t = [0.0]
+    journal = EventJournal(clock=lambda: t[0], capacity=4)
+    for i in range(10):
+        t[0] = float(i)
+        journal.append("ev", i=i)
+    assert len(journal) == 4
+    snap = journal.snapshot()
+    # oldest 6 dropped; seq keeps counting so the gap is detectable
+    assert [e["seq"] for e in snap] == [6, 7, 8, 9]
+    assert [e["i"] for e in snap] == [6, 7, 8, 9]
+    assert all(e["kind"] == "ev" for e in snap)
+    # snapshot returns copies, not live references
+    snap[0]["i"] = 999
+    assert journal.snapshot()[0]["i"] == 6
+
+
+def test_journal_orders_resize_events(qat_backend):
+    """resize() journals one "resize" event with before/after capacity;
+    a resize back to a seen shape journals but does NOT retrace."""
+    pipe, params = qat_backend
+    srv = StreamingKWSServer(
+        pipe, params, max_streams=MAX_STREAMS, metrics=True
+    )
+    srv.open_stream(0)
+    dim = pipe.config.fex.num_channels
+    srv.step_batch(np.zeros((MAX_STREAMS, dim), np.float32),
+                   np.ones(MAX_STREAMS, bool))
+    srv.resize(2 * MAX_STREAMS)
+    srv.step_batch(np.zeros((2 * MAX_STREAMS, dim), np.float32),
+                   np.ones(2 * MAX_STREAMS, bool))
+    srv.resize(MAX_STREAMS)
+    srv.step_batch(np.zeros((MAX_STREAMS, dim), np.float32),
+                   np.ones(MAX_STREAMS, bool))
+    ev = srv.metrics.journal.snapshot()
+    kinds = [e["kind"] for e in ev]
+    assert kinds == [
+        "compile_programs",   # construction
+        "retrace",            # first tick at 8
+        "resize",             # 8 -> 16
+        "retrace",            # first tick at 16
+        "resize",             # 16 -> 8: back to a seen shape...
+    ]                         # ...so NO trailing retrace event
+    seqs = [e["seq"] for e in ev]
+    assert seqs == sorted(seqs) and len(set(seqs)) == len(seqs)
+    grows = [e for e in ev if e["kind"] == "resize"]
+    assert (grows[0]["from_streams"], grows[0]["to_streams"]) == (8, 16)
+    assert (grows[1]["from_streams"], grows[1]["to_streams"]) == (16, 8)
+    assert srv.retrace_count == 2
+
+
+@pytest.mark.skipif(
+    N_DEV < 2,
+    reason="needs a multi-device platform (conftest forces 8 emulated "
+    "CPU devices unless XLA_FLAGS overrides it)",
+)
+def test_journal_orders_shard_loss_events(qat_backend):
+    """Shard loss journals the way recovery actually runs: the rebuild
+    ("compile_programs") happens MID-recovery, so it lands before the
+    "shard_loss" summary event; the first post-recovery tick retraces
+    (the seen-shape set was cleared with the old programs)."""
+    pipe, params = qat_backend
+    ms = 2 * MESH_DEV
+    srv = StreamingKWSServer(
+        pipe, params, max_streams=ms, devices=MESH_DEV, metrics=True
+    )
+    for sid in range(ms):
+        srv.open_stream(sid)
+    dim = pipe.config.fex.num_channels
+    srv.step_batch(np.zeros((ms, dim), np.float32), np.ones(ms, bool))
+    r0 = srv.retrace_count
+    info = srv.recover_shard_loss(0)
+    new_ms = srv.max_streams
+    srv.step_batch(np.zeros((new_ms, dim), np.float32),
+                   np.ones(new_ms, bool))
+    kinds = [e["kind"] for e in srv.metrics.journal.snapshot()]
+    assert kinds == [
+        "compile_programs",  # construction
+        "retrace",           # first tick on the full mesh
+        "compile_programs",  # rebuild on the survivor mesh...
+        "shard_loss",        # ...then the recovery summary
+        "retrace",           # first tick post-recovery counts again
+    ]
+    loss = [e for e in srv.metrics.journal.snapshot()
+            if e["kind"] == "shard_loss"][0]
+    assert loss["lost_shard"] == 0
+    assert loss["from_devices"] == MESH_DEV
+    assert loss["to_devices"] == srv.n_devices
+    assert loss["from_streams"] == ms
+    assert loss["to_streams"] == new_ms
+    assert srv.retrace_count == r0 + 1
+    assert srv.compile_count == 2
+    assert info  # the recovery report itself is unchanged
+
+
+# --------------------------------------------------------------------------
+# Autoscaler decisions: last_decision + journal + counters
+# --------------------------------------------------------------------------
+
+def _auto(qat_backend, n_open, **policy):
+    pipe, params = qat_backend
+    srv = StreamingKWSServer(
+        pipe, params, max_streams=policy.get("min_streams", 8),
+        metrics=True,
+    )
+    for sid in range(n_open):
+        srv.open_stream(sid)
+    pol = AutoscalePolicy(**policy)
+    return srv, Autoscaler(srv, pol, monitor=StragglerMonitor(warmup=0))
+
+
+def test_autoscaler_grow_reasons_and_counter(qat_backend):
+    srv, auto = _auto(
+        qat_backend, n_open=8, min_streams=8, max_streams=32,
+        hysteresis_ticks=2, cooldown_ticks=0,
+    )
+    assert auto.last_decision is None
+    assert auto.observe() is None      # hysteresis tick 1
+    assert auto.observe() == "grow"    # tick 2: watermark trip
+    assert auto.last_decision["reason"] == "occupancy_watermark"
+    assert auto.last_decision["action"] == "grow"
+    assert (auto.last_decision["from"], auto.last_decision["to"]) == (
+        8, 16
+    )
+    auto.note_rejection()
+    assert auto.observe() == "grow"    # rejection: immediate
+    assert auto.last_decision["reason"] == "rejection"
+    assert srv.max_streams == 32
+    counted = srv.metrics.counter(
+        "kws_autoscale_decisions_total", action="grow"
+    )
+    assert counted.value == 2
+    # the server's "resize" event precedes the "autoscale" decision
+    # that caused it (the resize happens inside the decision)
+    kinds = [e["kind"] for e in srv.metrics.journal.snapshot()]
+    i_rs = kinds.index("resize")
+    i_as = kinds.index("autoscale")
+    assert i_rs < i_as
+
+
+def test_autoscaler_slo_veto_recorded_once_per_trip(qat_backend):
+    srv, auto = _auto(
+        qat_backend, n_open=1, min_streams=4, max_streams=16,
+        shrink_at=0.3, grow_at=0.9, hysteresis_ticks=2,
+        cooldown_ticks=0,
+    )
+    srv.resize(16)  # occupancy 1/16 -> shrink territory
+    auto.observe(0.001)  # seeds the straggler EMA
+    # a 100x tick: SLO unhealthy while low occupancy trips hysteresis
+    assert auto.observe(0.1) is None
+    assert auto.last_decision == {
+        "step": 2, "action": "hold", "from": 16, "to": 16,
+        "reason": "slo_veto",
+    }
+    assert auto.observe(0.1) is None  # still vetoed, NOT re-recorded
+    vetos = [e for e in srv.metrics.journal.snapshot()
+             if e["kind"] == "autoscale"]
+    assert len(vetos) == 1 and vetos[0]["reason"] == "slo_veto"
+    assert srv.metrics.counter(
+        "kws_autoscale_decisions_total", action="hold"
+    ).value == 1
+    # SLO recovers -> the held shrink applies, with its own reason
+    assert auto.observe(0.001) == "shrink"
+    assert auto.last_decision["action"] == "shrink"
+    assert auto.last_decision["reason"] == "occupancy_watermark"
+    assert srv.max_streams < 16
+
+
+# --------------------------------------------------------------------------
+# snapshot round-trip + Prometheus exposition
+# --------------------------------------------------------------------------
+
+def _exercised_server(qat_backend):
+    pipe, params = qat_backend
+    srv = StreamingKWSServer(
+        pipe, params, max_streams=MAX_STREAMS, metrics=True
+    )
+    for sid in range(MAX_STREAMS):
+        srv.open_stream(sid)
+    ing = PipelinedIngress(srv, pipe.config.fex.num_channels, depth=2)
+    for s, m in _ticks(pipe, 5, "fv", seed=17):
+        slab, mask = ing.stage()
+        slab[:] = s
+        mask[:] = m
+        ing.commit()
+    ing.drain()
+    return srv
+
+
+def test_metrics_snapshot_json_round_trip(qat_backend):
+    srv = _exercised_server(qat_backend)
+    snap = srv.metrics_snapshot()
+    assert set(snap) >= {
+        "server", "counters", "gauges", "histograms", "journal", "spans"
+    }
+    sb = snap["server"]
+    assert sb["open_streams"] == MAX_STREAMS and sb["occupancy"] == 1.0
+    assert sb["retraces"] == srv.retrace_count >= 1
+    assert json.loads(json.dumps(snap)) == snap
+    # every pipelined tick carried the full span chain
+    assert snap["spans"]["stage_to_commit"]["count"] == 5
+    assert snap["spans"]["dispatch_to_retire"]["count"] == 5
+    assert snap["spans"]["total"]["count"] == 5
+    # metrics-off server: the server block alone, still JSON-able.
+    # metrics=False (an argparse store_true default) means OFF too —
+    # any falsy value must not be treated as a registry
+    pipe, params = qat_backend
+    off = StreamingKWSServer(
+        pipe, params, max_streams=MAX_STREAMS, metrics=False
+    )
+    assert off.metrics is None
+    snap_off = off.metrics_snapshot()
+    assert set(snap_off) == {"server"}
+    assert json.loads(json.dumps(snap_off)) == snap_off
+    assert snap_off["server"]["sparsity_mean"] is None  # no open slots
+
+
+_SAMPLE_RE = re.compile(
+    r"^([a-zA-Z_:][a-zA-Z0-9_:]*)"            # metric name
+    r'(\{[a-zA-Z_][a-zA-Z0-9_]*="[^"]*"'      # first label
+    r'(,[a-zA-Z_][a-zA-Z0-9_]*="[^"]*")*\})?' # more labels
+    r" (-?[0-9.e+\-]+|NaN)$"                  # value
+)
+
+
+def test_prometheus_exposition_parses(qat_backend):
+    srv = _exercised_server(qat_backend)
+    text = srv.metrics.render_prometheus()
+    assert text.endswith("\n")
+    families = {}
+    samples = {}
+    for line in text.strip().split("\n"):
+        if line.startswith("# TYPE "):
+            _, _, name, kind = line.split(" ")
+            families[name] = kind
+            continue
+        if line.startswith("# HELP "):
+            continue
+        m = _SAMPLE_RE.match(line)
+        assert m, f"unparseable sample line: {line!r}"
+        samples.setdefault(m.group(1), []).append(line)
+    assert families["kws_serve_ticks_total"] == "counter"
+    assert families["kws_serve_tick_dispatch_ms"] == "histogram"
+    assert families["kws_serve_occupancy"] == "gauge"
+    # histogram series: cumulative buckets, +Inf bucket == _count
+    for name, kind in families.items():
+        if kind != "histogram":
+            continue
+        buckets = [
+            ln for ln in samples.get(name + "_bucket", [])
+        ]
+        counts = [float(ln.rsplit(" ", 1)[1]) for ln in buckets]
+        assert counts == sorted(counts)  # cumulative, non-decreasing
+        assert any('le="+Inf"' in ln for ln in buckets)
+        total = float(samples[name + "_count"][0].rsplit(" ", 1)[1])
+        inf = [ln for ln in buckets if 'le="+Inf"' in ln][0]
+        assert float(inf.rsplit(" ", 1)[1]) == total
+
+
+def test_prometheus_label_escaping():
+    reg = MetricsRegistry()
+    reg.counter("esc_total", "", path='a"b\\c\nd').inc()
+    text = reg.render_prometheus()
+    assert r'path="a\"b\\c\nd"' in text
+
+
+# --------------------------------------------------------------------------
+# trace spans + ingress gauges + coalescer flush reasons
+# --------------------------------------------------------------------------
+
+def test_ingress_trace_marks_ordered(qat_backend):
+    srv = _exercised_server(qat_backend)
+    traces = list(srv.metrics.traces)
+    assert len(traces) == 5
+    for tr in traces:
+        assert list(tr.marks) == ["stage", "commit", "dispatch",
+                                  "retire"]
+        ts = list(tr.marks.values())
+        assert ts == sorted(ts)  # marks advance monotonically
+    assert srv.metrics.counter(
+        "kws_ingress_dispatches_total"
+    ).value == 5
+    assert srv.metrics.gauge("kws_ingress_in_flight").value == 0.0
+
+
+def test_span_percentiles_rollup():
+    t = [0.0]
+    reg = MetricsRegistry(clock=lambda: t[0])
+    for k in range(3):
+        tr = reg.trace(("tick", k))
+        tr.mark("stage", t=0.0)
+        tr.mark("commit", t=0.001 * (k + 1))   # 1, 2, 3 ms
+        tr.mark("retire", t=0.010)
+    spans = span_percentiles(reg.traces)
+    assert spans["stage_to_commit"]["count"] == 3
+    np.testing.assert_allclose(spans["stage_to_commit"]["mean_ms"], 2.0)
+    np.testing.assert_allclose(spans["total"]["mean_ms"], 10.0)
+    # traces with < 2 marks contribute nothing
+    lone = TickTrace("x", lambda: 0.0)
+    lone.mark("stage")
+    assert span_percentiles([lone]) == {}
+
+
+def test_coalescer_flush_reason_counters(qat_backend):
+    pipe, params = qat_backend
+    srv = StreamingKWSServer(
+        pipe, params, max_streams=MAX_STREAMS, metrics=True
+    )
+    for sid in range(2):
+        srv.open_stream(sid)
+    clock = [100.0]
+    co = TickCoalescer(srv, clock=lambda: clock[0], window_ms=16.0)
+    f = np.ones(pipe.config.fex.num_channels, np.float32)
+
+    def flushes(reason):
+        return srv.metrics.counter(
+            "kws_coalescer_flushes_total", reason=reason
+        ).value
+
+    co.add(0, f)
+    co.add(1, f)          # every open stream submitted -> "full"
+    assert flushes("full") == 1
+    co.add(0, f)
+    clock[0] += 0.017
+    co.poll()             # past the window -> "deadline"
+    assert flushes("deadline") == 1
+    co.add(0, f)
+    co.add(0, 2 * f)      # same stream again -> "second_frame"
+    assert flushes("second_frame") == 1
+    co.flush()            # the reopened window -> "manual"
+    assert flushes("manual") == 1
+    co.drain()
+
+
+# --------------------------------------------------------------------------
+# TickHandle.done_at regression: stamped on first ready() poll
+# --------------------------------------------------------------------------
+
+def test_tick_handle_done_at_stamped_on_first_ready_poll(qat_backend):
+    """done_at marks COMPLETION, not fetch: the first ready() poll that
+    observes the tick done stamps it, and a (possibly much later)
+    result() must not move it."""
+    pipe, params = qat_backend
+    srv = StreamingKWSServer(
+        pipe, params, max_streams=MAX_STREAMS, metrics=True
+    )
+    for sid in range(MAX_STREAMS):
+        srv.open_stream(sid)
+    slab, mask = _ticks(pipe, 1, "fv", seed=23)[0]
+    h = srv.step_batch_async(slab, mask)
+    while not h.ready():
+        pass
+    assert h.done_at is not None   # stamped by the poll itself...
+    d0 = h.done_at
+    h.result()                     # ...and a later fetch keeps it
+    assert h.done_at == d0
+    # a handle fetched without ever polling still gets a stamp
+    h2 = srv.step_batch_async(slab, mask)
+    h2.result()
+    assert h2.done_at is not None
+    # and the fetch itself was observed into the serve-side histogram
+    assert srv.metrics.histogram("kws_serve_tick_fetch_ms").count >= 2
